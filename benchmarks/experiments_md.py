@@ -1,0 +1,234 @@
+"""Assemble EXPERIMENTS.md from experiment artifacts.
+
+    PYTHONPATH=src python -m benchmarks.experiments_md
+
+Sections §Dry-run and §Roofline are generated from experiments/dryrun/;
+§Kernel-suite and §Triad from experiments/bench/; §Perf is included verbatim
+from experiments/perf_log.md (the hand-written hypothesis->measure log), so
+regeneration never clobbers analysis text.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(".")
+DRY = ROOT / "experiments" / "dryrun"
+BENCH = ROOT / "experiments" / "bench"
+PERF_LOG = ROOT / "experiments" / "perf_log.md"
+OUT = ROOT / "EXPERIMENTS.md"
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+               "long_500k": 3}
+
+
+def rows_for(mesh: str):
+    d = DRY / mesh
+    rows = [json.loads(p.read_text()) for p in sorted(d.glob("*.json"))]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.get(r["shape"], 9)))
+    return rows
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = rows_for(mesh)
+    out = ["| arch | shape | kind | chips | GFLOP/dev | GB/dev | commGB/dev "
+           "| peak GiB/dev | fits 16 GiB | compile s |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        p = r["program"]
+        mem = r.get("memory_analysis") or {}
+        peak = (mem.get("peak_bytes_est") or 0) / 2**30
+        comm = r["roofline"]["comm_bytes_per_device"]
+        byts = r["roofline"]["bytes_per_device"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | {r['n_chips']} "
+            f"| {p['flops_per_device'] / 1e9:,.0f} | {byts / 1e9:,.1f} "
+            f"| {comm / 1e9:,.2f} | {peak:.2f} "
+            f"| {'Y' if r.get('fits_hbm') else 'N'} "
+            f"| {r['t_compile_s']:.0f} |")
+    return "\n".join(out)
+
+
+def hint_of(r: dict) -> str:
+    for line in r.get("pa_report", "").splitlines():
+        line = line.strip()
+        if line.startswith("- "):
+            return line[2:].split(":")[0].split(",")[0]
+    return ""
+
+
+def roofline_table() -> str:
+    rows = rows_for("single_pod")
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| t_est s | roofline frac | MF/HLO | MXU lanes "
+           "| what would move it |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        rf = r["roofline"]
+        t_est = r.get("engine", {}).get("t_est", 0.0)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.4f} "
+            f"| {rf['memory_s']:.4f} | {rf['collective_s']:.4f} "
+            f"| **{rf['dominant']}** | {t_est:.3f} "
+            f"| {rf['roofline_fraction']:.2f} "
+            f"| {rf['useful_flops_ratio']:.2f} "
+            f"| {rf['mxu_utilization']:.2f} | {hint_of(r)} |")
+    return "\n".join(out)
+
+
+def kernel_section() -> str:
+    p = BENCH / "kernel_suite.json"
+    if not p.exists():
+        return "_run `python -m benchmarks.kernel_suite` first_"
+    d = json.loads(p.read_text())
+    s = d["summary"]
+    out = ["| kernel | type | measured µs | simulated µs | diff % | fit input |",
+           "|---|---|---|---|---|---|"]
+    fits = set(d.get("calibrated_host", {}).get("opcode_factor", {}))
+    for r in d["rows"]:
+        out.append(f"| {r['name']} | {r['type']} | {r['measured_us']:.0f} "
+                   f"| {r['simulated_us']:.0f} | {r['diff_pct']:+.1f} "
+                   f"| {'*' if r.get('fit_input') else ''} |")
+    out.append("")
+    out.append(f"**Summary (28 kernels):** mean {s['mean_diff_pct']:+.1f}% · "
+               f"std {s['std_diff_pct']:.1f}% · mean |diff| "
+               f"{s['mean_abs_diff_pct']:.1f}% · within ±10%: "
+               f"{100 * s['within_10pct']:.0f}%  — paper: +1.3% · 7.8% · "
+               f"6.6% · 82%.")
+    return "\n".join(out)
+
+
+def triad_section() -> str:
+    p = BENCH / "triad.json"
+    if not p.exists():
+        return "_run `python -m benchmarks.triad` first_"
+    d = json.loads(p.read_text())
+    out = []
+    for name, title in (("triad_l2", "Fig. 4 analogue (cache-resident)"),
+                        ("triad_mem", "Fig. 5 analogue (DRAM-resident)")):
+        out.append(f"**{title}**")
+        out.append("")
+        out.append("| threads | measured GB/s | simulated GB/s | diff % |")
+        out.append("|---|---|---|---|")
+        for r in d[name]:
+            out.append(f"| {r['threads']} | {r['measured_gbps']:.2f} "
+                       f"| {r['simulated_gbps']:.2f} "
+                       f"| {r['diff_pct']:+.1f} |")
+        out.append("")
+    return "\n".join(out)
+
+
+HEADER = """# EXPERIMENTS
+
+All numbers produced in this container (1-core CPU host; TPU v5e is the
+*simulated target*: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI per
+chip).  Reproduce with the commands shown in each section.
+
+## §Dry-run — every (arch × shape) lowered + compiled on the production meshes
+
+`PYTHONPATH=src python -m repro.launch.dryrun` — 32 live cells (+8 documented
+skips = the 40 assigned) × 2 meshes, `.lower().compile()` through real GSPMD
+partitioning with 256/512 placeholder host devices.  Quantities are
+per-device, parsed from the partitioned HLO (loop trip counts multiplied;
+fusion boundaries, sliced reads and in-place DUS modeled; f32 promotions of
+bf16 buffers — an XLA:CPU float-normalization artifact — counted at bf16
+width; see DESIGN.md §9).
+
+`peak GiB/dev` is XLA's own buffer-assignment estimate for the *CPU*
+executable: it holds f32-normalized copies of bf16 buffers, so it
+over-estimates the TPU footprint by up to 2× on cache/activation-dominated
+cells; cells marked `N` are therefore *conservative* fails — the §Perf log
+addresses the real offenders.
+
+### Single-pod mesh (16, 16) = 256 chips — ("data", "model")
+
+{dry_single}
+
+### Multi-pod mesh (2, 16, 16) = 512 chips — ("pod", "data", "model")
+
+{dry_multi}
+
+**Skipped cells (8, documented):** `long_500k` for the eight pure
+full-attention architectures — a 500k-token KV cache across all layers
+exceeds per-chip HBM (e.g. qwen1.5-110b: ≈172 GiB/sequence) and decode over
+it is the degenerate port the assignment says to skip.  It **runs** for
+mamba2-1.3b and zamba2-1.2b (SSM/hybrid, O(1)/O(shared) state).
+
+## §Roofline — three-term analysis per cell (single-pod, baseline)
+
+    compute    = HLO_FLOPs/dev   / 197 TFLOP/s     (bf16)
+    memory     = HLO_bytes/dev   / 819 GB/s
+    collective = comm_bytes/dev  / 50 GB/s/link
+
+`roofline frac` = compute / max(terms) — 1.0 means compute-bound (the
+ceiling for a training step).  `MF/HLO` = MODEL_FLOPS (6·N·D train,
+2·N_active·D inference) / compiled HLO FLOPs — how much compiled compute is
+"useful" (catches remat recompute, MoE dispatch, attention O(S²) work).
+`MXU lanes` = useful-lane fraction of 128³-tile-padded matmul FLOPs (the
+paper's predicate-aware SIMD counting, MXU edition).  `t_est` is the
+engine's end-to-end step-time ESTIMATE (the paper's headline output:
+execution time on hardware that does not exist yet) — port occupancies
+composed with the configured DMA/ICI overlap factors plus per-op startup,
+always ≥ the perfect-overlap roofline bound.
+
+{roofline}
+
+## §Kernel-suite — paper Table 1 + Fig. 3
+
+`PYTHONPATH=src python -m benchmarks.kernel_suite`.  The host CPU plays the
+A64FX test chip: the simulator consumes the *compiled HLO* of each kernel
+and a **calibrated host parameter file** (the paper received Fujitsu's NDA
+parameters; we fit ours: ALU rate from a Horner-16 polynomial, DRAM/LLC
+stream rates from `add` at matched sizes, per-opcode latency factors with
+stream time subtracted — kernels marked `*` informed the fit, the other 19
+are out-of-fit predictions).
+
+{kernels}
+
+Residual analysis: the large misses are the f32→f64 converts (f2d/i2d,
+−44%) — the paper's *own* outliers were the converts (d2f/d2i, which they
+attributed to un-modeled write-merge) — plus `mod` (+82%, XLA emits a
+divide+trunc chain the factor table double-counts).  On a 1-core shared VM
+the measured side also carries scheduling noise the paper's dedicated test
+chip did not have.
+
+## §Triad — paper Figs. 4/5
+
+`PYTHONPATH=src python -m benchmarks.triad`.  The paper sweeps 1–12 A64FX
+cores against shared L2/HBM2; the host analogue sweeps 1–12 XLA host
+devices against the shared LLC/DRAM.  The simulator is the engine's
+saturating-bandwidth model, parameters fitted at the sweep endpoints (the
+paper's tuning step), interior points test the model.
+
+{triad}
+
+This container has **1 physical core**, so the measured curves saturate at
+n=1 and *degrade* with oversubscription — the model (no contention term)
+over-predicts by 10–35% at high thread counts.  The paper saw the same
+class of error in mirror image: its simulator lacked the L2 fairness
+control and *under*-predicted high-thread throughput (their Fig. 4, −30%
+at 12 threads).  Scaling-regime edges are where bandwidth simulators break;
+reproducing that failure mode is part of reproducing the paper.
+
+## §Perf — hypothesis → change → measure log
+
+{perf}
+"""
+
+
+def main() -> int:
+    perf = PERF_LOG.read_text() if PERF_LOG.exists() else "_pending_"
+    OUT.write_text(HEADER.format(
+        dry_single=dryrun_table("single_pod"),
+        dry_multi=dryrun_table("multi_pod"),
+        roofline=roofline_table(),
+        kernels=kernel_section(),
+        triad=triad_section(),
+        perf=perf,
+    ))
+    print(f"wrote {OUT}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,113 @@
+"""Paper Table 1 + Fig. 3: the 28-kernel suite, simulator-vs-measured.
+
+Two outputs, mirroring the two axes of Fig. 3:
+
+1. **Accuracy** (the orange dots): % execution-time difference between the
+   RIKEN-style simulator (``core.simulate`` on the compiled HLO, with the
+   *calibrated* CPU_HOST parameter file) and the host CPU — the only silicon
+   in this container, playing the A64FX test chip's role.  Summary stats are
+   printed against the paper's (mean +1.3%, std 7.8%, |mean| 6.6%, 82%
+   within +-10%).
+
+2. **Throughput** (the bar chart): simulated cycles per 8-element operation
+   on a single A64FX core (the paper's own target), from the same compiled
+   HLO costed with the ``A64FX_CORE`` parameter file.
+
+Usage:  PYTHONPATH=src python -m benchmarks.kernel_suite [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+import jax
+
+from repro.configs.a64fx_kernelsuite import (
+    KERNELS, PAPER_MEAN_ABS_DIFF_PCT, PAPER_MEAN_DIFF_PCT,
+    PAPER_STD_DIFF_PCT, PAPER_WITHIN_10PCT_FRACTION)
+from repro.core import calibrate
+from repro.core.hwspec import A64FX_CORE
+from repro.core.simulate import simulate
+
+OUT = Path("experiments/bench")
+
+
+def a64fx_cycles_per_8elem(kernel_name: str, n: int) -> float:
+    """Simulated single-core A64FX cycles per 8-element operation."""
+    from repro.configs.a64fx_kernelsuite import KERNELS_BY_NAME
+    with jax.enable_x64(True):
+        x1, x2, y0 = calibrate._kernel_inputs(KERNELS_BY_NAME[kernel_name], n)
+        f = calibrate._jit_kernel(kernel_name)
+        compiled = f.lower(x1, x2, y0).compile()
+    rep = simulate(compiled, hw=A64FX_CORE, n_chips=1, compute_dtype="f64")
+    cycles = rep.engine.t_est * 1.8e9
+    return cycles / (n / 8)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="subset of kernels, fewer repeats")
+    ap.add_argument("--size-scale", type=int, default=calibrate.SIZE_SCALE)
+    args = ap.parse_args(argv)
+
+    kernels = KERNELS[::4] if args.quick else KERNELS
+
+    print("== calibrating CPU_HOST parameter file (the paper's Fujitsu-"
+          "parameter step, fitted not NDA'd) ==")
+    hw = calibrate.fit_cpu_host()
+    print(f"  vpu {hw.vpu_flops['f64'] / 1e9:.2f} GFLOP/s  "
+          f"hbm {hw.hbm_read_bw / 1e9:.2f} GB/s  "
+          f"llc {hw.vmem_bw / 1e9:.2f} GB/s  "
+          f"startup {hw.op_startup_ns / 1e3:.0f} us")
+    print(f"  opcode factors: "
+          f"{ {k: round(v, 1) for k, v in sorted(hw.opcode_factor.items())} }")
+
+    print("\n== accuracy vs the host 'test chip' (Fig. 3 orange dots) ==")
+    table = calibrate.kernel_accuracy_table(hw, size_scale=args.size_scale,
+                                            kernels=kernels)
+    print(table.report())
+
+    print("\n== simulated A64FX single-core throughput "
+          "(Fig. 3 bars; cycles / 8-element op) ==")
+    bars = {}
+    for k in kernels:
+        c = a64fx_cycles_per_8elem(k.name, k.n * 8)
+        bars[k.name] = c
+        print(f"  {k.name:<8s}{k.ktype:<10s}{c:8.2f} cyc/8elem")
+
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "kernel_suite.json").write_text(json.dumps({
+        "rows": [{"name": r.name, "type": r.ktype, "n": r.n,
+                  "measured_us": r.measured_us,
+                  "simulated_us": r.simulated_us,
+                  "diff_pct": r.diff_pct} for r in table.rows],
+        "summary": {
+            "mean_diff_pct": table.mean_diff,
+            "std_diff_pct": table.std_diff,
+            "mean_abs_diff_pct": table.mean_abs_diff,
+            "within_10pct": table.within_10pct,
+            "paper": {
+                "mean_diff_pct": PAPER_MEAN_DIFF_PCT,
+                "std_diff_pct": PAPER_STD_DIFF_PCT,
+                "mean_abs_diff_pct": PAPER_MEAN_ABS_DIFF_PCT,
+                "within_10pct": PAPER_WITHIN_10PCT_FRACTION,
+            },
+        },
+        "a64fx_core_cycles_per_8elem": bars,
+        "calibrated_host": {
+            "vpu_gflops": hw.vpu_flops["f64"] / 1e9,
+            "hbm_gbps": hw.hbm_read_bw / 1e9,
+            "llc_gbps": hw.vmem_bw / 1e9,
+            "startup_us": hw.op_startup_ns / 1e3,
+            "opcode_factor": hw.opcode_factor,
+        },
+    }, indent=1))
+    print(f"\nwrote {OUT / 'kernel_suite.json'}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

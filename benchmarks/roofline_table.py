@@ -1,0 +1,85 @@
+"""§Roofline table builder: reads dry-run artifacts -> markdown/CSV.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--mesh single_pod]
+
+Emits, per (arch x shape) cell: the three roofline terms (seconds), the
+dominant term, MODEL_FLOPS/HLO_FLOPs, MXU useful-lane fraction, per-chip
+peak bytes, and the one-line tuning hint from the PA report.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+DRYRUN = Path("experiments/dryrun")
+
+
+def load_rows(mesh: str):
+    rows = []
+    d = DRYRUN / mesh
+    if not d.exists():
+        return rows
+    for p in sorted(d.glob("*.json")):
+        r = json.loads(p.read_text())
+        rows.append(r)
+    return rows
+
+
+def hint_of(r: dict) -> str:
+    pa = r.get("pa_report", "")
+    for line in pa.splitlines():
+        line = line.strip()
+        if line.startswith("- "):
+            return line[2:].split(":")[0]
+    return ""
+
+
+def fmt_markdown(rows) -> str:
+    out = ["| arch | shape | kind | compute s | memory s | collective s | "
+           "dominant | MF/HLO | MXU lanes | peak GiB | fits | hint |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        rf = r["roofline"]
+        mem = r.get("memory_analysis") or {}
+        peak = (mem.get("peak_bytes_est") or 0) / 2**30
+        fits = "Y" if r.get("fits_hbm") else "N"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+            f"| {rf['collective_s']:.4f} | **{rf['dominant']}** "
+            f"| {rf['useful_flops_ratio']:.2f} | {rf['mxu_utilization']:.2f} "
+            f"| {peak:.2f} | {fits} | {hint_of(r)} |")
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mesh", default="single_pod",
+                    choices=["single_pod", "multi_pod"])
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args(argv)
+    rows = load_rows(args.mesh)
+    if not rows:
+        print(f"no artifacts under {DRYRUN / args.mesh}; "
+              "run `python -m repro.launch.dryrun` first")
+        return 1
+    if args.csv:
+        print("arch,shape,kind,compute_s,memory_s,collective_s,dominant,"
+              "mf_hlo,mxu_lanes,peak_gib")
+        for r in rows:
+            rf = r["roofline"]
+            mem = r.get("memory_analysis") or {}
+            print(f"{r['arch']},{r['shape']},{r['kind']},"
+                  f"{rf['compute_s']:.6f},{rf['memory_s']:.6f},"
+                  f"{rf['collective_s']:.6f},{rf['dominant']},"
+                  f"{rf['useful_flops_ratio']:.4f},"
+                  f"{rf['mxu_utilization']:.4f},"
+                  f"{(mem.get('peak_bytes_est') or 0) / 2**30:.3f}")
+    else:
+        print(fmt_markdown(rows))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

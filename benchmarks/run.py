@@ -1,0 +1,74 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+* kernel_suite — Table 1 + Fig. 3 (28 kernels, simulator-vs-host accuracy
+  + simulated A64FX-core throughput bars),
+* triad       — Figs. 4/5 (Stream Triad thread scaling, two sizes),
+* roofline    — §Roofline table from the dry-run artifacts (if present).
+
+Prints a final ``name,us_per_call,derived`` CSV summary.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from . import kernel_suite, roofline_table, triad
+
+OUT = Path("experiments/bench")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip-triad", action="store_true")
+    args = ap.parse_args(argv)
+
+    rc = 0
+    print("#" * 72)
+    print("# kernel_suite (paper Table 1 + Fig. 3)")
+    print("#" * 72)
+    rc |= kernel_suite.main(["--quick"] if args.quick else [])
+
+    if not args.skip_triad:
+        print("\n" + "#" * 72)
+        print("# triad (paper Figs. 4/5)")
+        print("#" * 72)
+        rc |= triad.main(["--quick"] if args.quick else [])
+
+    print("\n" + "#" * 72)
+    print("# roofline table (assignment §Roofline; from dry-run artifacts)")
+    print("#" * 72)
+    roofline_table.main([])          # informative; absent artifacts -> note
+
+    # ------------------------------------------------- CSV summary
+    print("\nname,us_per_call,derived")
+    ks = OUT / "kernel_suite.json"
+    if ks.exists():
+        d = json.loads(ks.read_text())
+        for row in d["rows"]:
+            print(f"kernel.{row['name']},{row['measured_us']:.2f},"
+                  f"diff_pct={row['diff_pct']:.1f}")
+        s = d["summary"]
+        print(f"kernel_suite.mean_abs_diff,,"
+              f"{s['mean_abs_diff_pct']:.2f}pct_vs_paper_"
+              f"{s['paper']['mean_abs_diff_pct']}pct")
+        print(f"kernel_suite.within_10pct,,"
+              f"{100 * s['within_10pct']:.0f}pct_vs_paper_82pct")
+    tr = OUT / "triad.json"
+    if tr.exists():
+        d = json.loads(tr.read_text())
+        for section in ("triad_l2", "triad_mem"):
+            for row in d[section]:
+                print(f"{section}.t{row['threads']},"
+                      f"{row['measured_s'] * 1e6:.1f},"
+                      f"gbps={row['measured_gbps']:.2f};"
+                      f"diff_pct={row['diff_pct']:.1f}")
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,87 @@
+"""Serve a small model with batched requests (prefill + cached decode).
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Trains a tiny LM on an affine-markov token stream with a FIXED rule
+(x[t+1] = (m*x[t] + noise) mod V), then serves generation requests; the
+served continuations should follow the learned rule, which we score.  This
+demonstrates the prefill/decode cache path end-to-end — including for the
+attention-free (mamba2) architecture, whose "cache" is the SSD state.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, RunConfig, ShapeConfig, reduced_config
+from repro.launch.train import build_training
+from repro.models.lm import build_model
+from repro.serve.engine import ServeEngine
+
+MULT = 3
+VOCAB = 256
+
+
+def markov_seq(rng, length):
+    x = np.empty(length, np.int64)
+    x[0] = rng.integers(0, VOCAB)
+    noise = rng.integers(0, 3, size=length)
+    for t in range(1, length):
+        x[t] = (MULT * x[t - 1] + noise[t]) % VOCAB
+    return x
+
+
+def train_briefly(model, cfg, steps=500, batch=32, seq=64, lr=3e-3):
+    shape = ShapeConfig(name="s", seq_len=seq, global_batch=batch,
+                        kind="train")
+    run = RunConfig(model=cfg, shape=shape, param_dtype="float32",
+                    compute_dtype="float32", learning_rate=lr)
+    jstep, init_state, _ = build_training(model, run)
+    params, opt = init_state(0)
+    rng = np.random.default_rng(0)
+    for i in range(steps):
+        b = {"tokens": jnp.asarray(
+            np.stack([markov_seq(rng, seq) for _ in range(batch)]),
+            jnp.int32)}
+        params, opt, m = jstep(params, opt, b)
+        if i % 100 == 0 or i == steps - 1:
+            print(f"  train step {i}: loss {float(m['loss']):.3f}")
+    return params
+
+
+def rule_accuracy(prompt, out):
+    """Fraction of generated transitions consistent with the markov rule."""
+    seq = [prompt[-1]] + out
+    ok = sum((seq[t + 1] - MULT * seq[t]) % VOCAB in (0, 1, 2)
+             for t in range(len(seq) - 1))
+    return ok, len(seq) - 1
+
+
+def main() -> int:
+    for arch in ("chatglm3-6b", "mamba2-1.3b"):
+        cfg = dataclasses.replace(reduced_config(ARCHS[arch]),
+                                  vocab_size=VOCAB)
+        model = build_model(cfg)
+        print(f"\n=== {arch} (reduced, vocab {VOCAB}) ===")
+        params = train_briefly(model, cfg)
+
+        engine = ServeEngine(model, params, max_seq=48)
+        rng = np.random.default_rng(7)
+        prompts = [list(markov_seq(rng, 24).astype(int)) for _ in range(4)]
+        outs = engine.generate(prompts, max_new_tokens=12)
+        hits = total = 0
+        for p, o in zip(prompts, outs):
+            ok, n = rule_accuracy(p, o)
+            hits += ok
+            total += n
+            print(f"  served {o[:8]}... ({ok}/{n} transitions follow "
+                  f"the learned rule)")
+        print(f"  rule-following accuracy: {hits}/{total} "
+              f"({100 * hits / total:.0f}%)")
+        assert hits / total > 0.5, "served continuations ignore the rule"
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,85 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--size 100m]
+
+Uses the full production stack on the host: logical-axis sharding, grad
+accumulation, cosine schedule, atomic checkpointing, the fault-tolerant
+step loop (an injected failure at step 150 demonstrates restart), and the
+seekable synthetic data pipeline.  Loss falls from ~ln(V) to well below it
+as the model learns the synthetic stream's structure.
+"""
+import argparse
+import shutil
+import time
+
+import numpy as np
+
+from repro.configs import RunConfig, ShapeConfig
+from repro.configs.base import ModelConfig
+from repro.launch.train import train_loop
+from repro.models.lm import build_model
+from repro.train.fault import FaultInjector
+from repro.train.schedule import ScheduleConfig, make_schedule
+
+SIZES = {
+    # ~100M params: 12L d=768 (GPT-2-small-ish), GQA 12/4, SwiGLU
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                 d_ff=2048, vocab_size=32_000),
+    # ~20M for a faster demo run
+    "20m": dict(n_layers=8, d_model=384, n_heads=8, n_kv_heads=4,
+                d_ff=1024, vocab_size=8_000),
+    # ~3M smoke
+    "3m": dict(n_layers=4, d_model=192, n_heads=4, n_kv_heads=2,
+               d_ff=512, vocab_size=2_000),
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--size", default="20m", choices=sorted(SIZES))
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--microbatch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=6e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--inject-fault", action="store_true", default=True)
+    ap.add_argument("--no-inject-fault", dest="inject_fault",
+                    action="store_false")
+    args = ap.parse_args()
+
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)   # fresh demo run
+    cfg = ModelConfig(name=f"demo-{args.size}", family="dense",
+                      **SIZES[args.size])
+    model = build_model(cfg)
+    n = cfg.param_count()
+    print(f"training demo LM: {n / 1e6:.1f}M params, "
+          f"{args.steps} steps, batch {args.batch} x seq {args.seq}")
+
+    shape = ShapeConfig(name="demo", seq_len=args.seq,
+                        global_batch=args.batch, kind="train")
+    run = RunConfig(model=cfg, shape=shape, microbatch=args.microbatch,
+                    param_dtype="float32", compute_dtype="float32",
+                    learning_rate=args.lr)
+    injector = None
+    if args.inject_fault:
+        mid = args.steps // 2
+        injector = FaultInjector(fail_at_steps=(mid,))
+        print(f"(fault injected at step {mid}: the loop must restart from "
+              f"the latest checkpoint and converge anyway)")
+
+    t0 = time.time()
+    rep = train_loop(model, run, n_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                     ckpt_every=25, injector=injector, log_every=25)
+    dt = time.time() - t0
+    tok_s = args.steps * shape.tokens / dt
+    print(f"\ndone in {dt:.0f}s ({tok_s:,.0f} tok/s): "
+          f"loss {np.mean(rep.losses[:10]):.3f} -> "
+          f"{np.mean(rep.losses[-10:]):.3f}, restarts={rep.restarts}")
+    assert np.mean(rep.losses[-10:]) < np.mean(rep.losses[:10]) - 0.5, \
+        "loss did not fall"
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,5 @@
+"""repro: a multi-pod JAX training/serving framework built around a
+Post-K-style target-hardware performance simulator (RIKEN simulator, CS.DC
+2019, adapted gem5/A64FX -> XLA/TPU)."""
+
+__version__ = "0.1.0"

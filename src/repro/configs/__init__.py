@@ -1,0 +1,29 @@
+from .base import ModelConfig, MoEConfig, RunConfig, ShapeConfig, SSMConfig
+from .registry import ARCHS, get_arch, reduced_config
+from .shapes import (
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES,
+    TRAIN_4K,
+    shapes_for,
+    skipped_shapes_for,
+)
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "RunConfig",
+    "ShapeConfig",
+    "SSMConfig",
+    "ARCHS",
+    "get_arch",
+    "reduced_config",
+    "SHAPES",
+    "TRAIN_4K",
+    "PREFILL_32K",
+    "DECODE_32K",
+    "LONG_500K",
+    "shapes_for",
+    "skipped_shapes_for",
+]

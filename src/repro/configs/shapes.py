@@ -1,0 +1,33 @@
+"""The four assigned input-shape sets (identical across LM-family archs)."""
+from __future__ import annotations
+
+from .base import ShapeConfig
+
+TRAIN_4K = ShapeConfig(name="train_4k", seq_len=4_096, global_batch=256, kind="train")
+PREFILL_32K = ShapeConfig(name="prefill_32k", seq_len=32_768, global_batch=32, kind="prefill")
+DECODE_32K = ShapeConfig(name="decode_32k", seq_len=32_768, global_batch=128, kind="decode")
+LONG_500K = ShapeConfig(name="long_500k", seq_len=524_288, global_batch=1, kind="decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def shapes_for(model) -> list[ShapeConfig]:
+    """Applicable shapes for a model (long_500k only for sub-quadratic archs)."""
+    out = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if model.supports_long_context:
+        out.append(LONG_500K)
+    return out
+
+
+def skipped_shapes_for(model) -> list[tuple[ShapeConfig, str]]:
+    out = []
+    if not model.supports_long_context:
+        out.append(
+            (
+                LONG_500K,
+                "full-attention arch: 500k-token KV cache across all layers "
+                "exceeds per-chip HBM; assignment says skip for pure "
+                "full-attention archs",
+            )
+        )
+    return out

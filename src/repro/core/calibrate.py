@@ -1,0 +1,246 @@
+"""Calibration & accuracy evaluation — the paper's §5 methodology.
+
+The paper tunes gem5 with Fujitsu's parameters, then validates the simulator
+against the A64FX *test chip* on 28 kernels.  Our test chip is the CPU host
+(the only silicon in this container): we
+
+  1. FIT the ``CPU_HOST`` HardwareSpec from a handful of microbenchmarks
+     (add -> vector throughput, exp -> transcendental factor, triad ->
+     memory bandwidth, empty-jit -> op startup), then
+  2. EVALUATE the simulator on all 28 Table-1 kernels: measured wall time vs
+     simulated estimate of the same compiled HLO, reporting the % difference
+     exactly like Fig. 3 (mean / stddev / mean|.| / fraction within 10%).
+
+Adaptation note (recorded): the paper scales the outer iteration count by
+1/1000 because the simulator is slow; we scale the array size by 1024x
+because the host's per-call dispatch would otherwise dominate the
+measurement of L1-resident arrays.  Same trick, same reason.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.a64fx_kernelsuite import KERNELS, Kernel
+from ..kernels import ref as kref
+from ..kernels.stream import EXPRS, _DTYPES
+from .hwspec import CPU_HOST, HardwareSpec
+from .simulate import SimReport, simulate
+
+SIZE_SCALE = 1024     # paper: iter/1000; here: n x1024 (see module docstring)
+
+
+def _median_time(fn: Callable, args, repeats: int = 15) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)          # compile + warm
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts)
+
+
+def _kernel_inputs(k: Kernel, n: int, key=None):
+    fn, n_in, din, dout = EXPRS[k.name]
+    key = key or jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    if din == "i4":
+        x1 = jax.random.randint(k1, (n,), -1000, 1000, jnp.int32)
+    else:
+        x1 = (jnp.abs(jax.random.normal(k1, (n,), _DTYPES[din])) + 0.5)
+    x2 = (jnp.abs(jax.random.normal(k2, (n,), _DTYPES["f8" if din == "i4"
+                                                      else din])) + 0.5)
+    if din != "i4":
+        x2 = x2.astype(_DTYPES[din])
+    y0 = jnp.zeros((n,), _DTYPES[dout])
+    return x1, x2, y0
+
+
+def _jit_kernel(name: str):
+    @jax.jit
+    def f(x1, x2, y0):
+        return kref.elementwise_ref(name, x1, x2, y0)
+    return f
+
+
+def measure_dispatch_overhead() -> float:
+    f = jax.jit(lambda x: x)
+    x = jnp.zeros((8,), jnp.float32)
+    return _median_time(f, (x,), repeats=50)
+
+
+# kernels used to fit per-opcode factors and the HLO opcodes they exercise
+# (the paper's per-OpClass latency table, fitted instead of NDA-supplied).
+# Only *transcendental-class* opcodes are fitted; the arithmetic /
+# conversion / numeric kernels are predicted purely by the bandwidth +
+# vector-throughput model, so they genuinely test it (paper §5.1).
+_FACTOR_FIT = {
+    "exp": "exponential", "log": "log", "sin": "sine", "cos": "cosine",
+    "atan": "atan2", "sqrt": "sqrt", "div": "divide", "pwr": "power",
+}
+
+
+def _poly16(x):
+    """Horner chain, 16 fma = 32 f64 flops per element — ALU-bound."""
+    y = x
+    for _ in range(16):
+        y = y * x + 1.25
+    return y
+
+
+def fit_cpu_host(n_mem: int = 1 << 21, n_fac: int = 1 << 15) -> HardwareSpec:
+    """Fit the host's HardwareSpec from microbenchmarks (under x64).
+
+    The paper's method, at our scale: separate the memory hierarchy from
+    the functional units, fit each level with a benchmark that isolates it,
+    then validate on all 28 kernels (§5.1).
+
+    * ``hbm_read_bw``  — DRAM-resident ``add`` at the SAME array scale the
+      suite evaluates (stream bandwidth is size-dependent on a shared VM),
+    * ``vmem_bw``      — L2-resident ``add`` (cache_model stream rate),
+    * ``vpu_flops``    — a 16-deep Horner polynomial on an L2-resident
+      array: ALU-bound, so it measures the functional unit, not a cache,
+    * per-opcode factors — L2-resident runs with the *estimated stream
+      time subtracted*, so the factor is pure instruction cost (the
+      paper's per-OpClass latency table, de-masked from bandwidth).
+    """
+    by_name = {k.name: k for k in KERNELS}
+    with jax.enable_x64(True):
+        startup = measure_dispatch_overhead()
+
+        def t_kernel(name: str, n: int, repeats: int = 15) -> float:
+            k = by_name[name]
+            x1, x2, y0 = _kernel_inputs(k, n)
+            return _median_time(_jit_kernel(name), (x1, x2, y0), repeats)
+
+        # --- ALU rate: Horner poly16, L2-resident
+        xp = jnp.abs(jax.random.normal(jax.random.PRNGKey(5), (n_fac,),
+                                       jnp.float64)) * 0.1 + 0.5
+        t_poly = _median_time(jax.jit(_poly16), (xp,), 25)
+        alu = 32.0 * n_fac / max(t_poly - startup, 1e-9)
+
+        # --- stream rates: L2-resident and DRAM-resident add (3 streams)
+        t_add_l2 = t_kernel("add", n_fac, 25)
+        l2_bw = 3 * 8 * n_fac / max(t_add_l2 - startup, 1e-9)
+        t_add_mem = t_kernel("add", n_mem)
+        mem_bw = 3 * 8 * n_mem / max(t_add_mem - startup, 1e-9)
+
+        # --- per-opcode factors at the EVALUATION scale, with the stream
+        # time subtracted (paper: instruction latencies from Fujitsu specs;
+        # here: fitted — the 9 factor kernels are fit INPUTS, the other 19
+        # suite kernels are out-of-fit predictions, marked in the table).
+        factors = {}
+        for kname, opcode in _FACTOR_FIT.items():
+            k = by_name[kname]
+            _, n_in, _, _ = EXPRS[kname]
+            streams = n_in + 1                       # inputs + output
+            n_eval = k.n * SIZE_SCALE
+            t = t_kernel(kname, n_eval, 9)
+            t_mem = streams * 8 * n_eval / mem_bw
+            factors[opcode] = max(1.0,
+                                  (t - startup - t_mem) * alu / n_eval)
+        # mod = divide + round-trip; remainder rides the divide entry
+        factors.setdefault("remainder", factors.get("divide", 4.0))
+
+    return CPU_HOST.with_(
+        vpu_flops={"f64": alu, "f32": 2 * alu, "default": alu},
+        peak_flops={"f64": alu, "f32": 2 * alu, "default": alu},
+        transcendental_factor=max(2.0, factors.get("exponential", 4.0)),
+        opcode_factor=factors,
+        hbm_read_bw=mem_bw,
+        hbm_write_bw=mem_bw,
+        vmem_bytes=24 * 2**20,      # LLC stand-in
+        vmem_bw=l2_bw,
+        cache_model=True,
+        # a CPU core stalls on the miss THEN computes: additive composition
+        # (the A64FX/TPU overlap model does not transfer to the host)
+        dma_overlap=0.0,
+        op_startup_ns=startup * 1e9,
+    )
+
+
+@dataclass
+class KernelRow:
+    name: str
+    ktype: str
+    n: int
+    measured_us: float
+    simulated_us: float
+    fit_input: bool = False      # this kernel informed the parameter fit
+
+    @property
+    def diff_pct(self) -> float:
+        """Positive = simulator slower than test chip (paper convention)."""
+        return 100.0 * (self.simulated_us - self.measured_us) / self.measured_us
+
+
+@dataclass
+class AccuracyTable:
+    rows: List[KernelRow]
+
+    @property
+    def mean_diff(self) -> float:
+        return statistics.mean(r.diff_pct for r in self.rows)
+
+    @property
+    def std_diff(self) -> float:
+        return statistics.pstdev(r.diff_pct for r in self.rows)
+
+    @property
+    def mean_abs_diff(self) -> float:
+        return statistics.mean(abs(r.diff_pct) for r in self.rows)
+
+    @property
+    def within_10pct(self) -> float:
+        return sum(abs(r.diff_pct) <= 10.0 for r in self.rows) / len(self.rows)
+
+    def report(self) -> str:
+        lines = [f"{'kernel':<8s}{'type':<10s}{'n':>9s}{'measured_us':>13s}"
+                 f"{'simulated_us':>14s}{'diff%':>8s}  fit?"]
+        for r in self.rows:
+            lines.append(f"{r.name:<8s}{r.ktype:<10s}{r.n:>9d}"
+                         f"{r.measured_us:>13.2f}{r.simulated_us:>14.2f}"
+                         f"{r.diff_pct:>8.1f}  {'*' if r.fit_input else ''}")
+        lines.append(
+            f"-- all 28:  mean {self.mean_diff:+.1f}%  std "
+            f"{self.std_diff:.1f}%  mean|.| {self.mean_abs_diff:.1f}%  "
+            f"within+-10%: {100 * self.within_10pct:.0f}%  "
+            f"(paper: +1.3%, 7.8%, 6.6%, 82%)")
+        held = [r for r in self.rows if not r.fit_input]
+        if held and len(held) < len(self.rows):
+            ho = AccuracyTable(held)
+            lines.append(
+                f"-- held-out ({len(held)}): mean {ho.mean_diff:+.1f}%  "
+                f"std {ho.std_diff:.1f}%  mean|.| {ho.mean_abs_diff:.1f}%  "
+                f"within+-10%: {100 * ho.within_10pct:.0f}%   "
+                f"(* = parameter-fit inputs, as the paper's Fujitsu-"
+                f"supplied latencies were)")
+        return "\n".join(lines)
+
+
+def kernel_accuracy_table(hw: Optional[HardwareSpec] = None,
+                          size_scale: int = SIZE_SCALE,
+                          kernels: Optional[List[Kernel]] = None
+                          ) -> AccuracyTable:
+    hw = hw or fit_cpu_host()
+    rows: List[KernelRow] = []
+    with jax.enable_x64(True):
+        for k in (kernels or KERNELS):
+            n = k.n * size_scale
+            x1, x2, y0 = _kernel_inputs(k, n)
+            f = _jit_kernel(k.name)
+            t = _median_time(f, (x1, x2, y0))
+            compiled = f.lower(x1, x2, y0).compile()
+            rep = simulate(compiled, hw=hw, n_chips=1, compute_dtype="f64")
+            rows.append(KernelRow(k.name, k.ktype, n, t * 1e6,
+                                  rep.engine.t_est * 1e6,
+                                  fit_input=k.name in _FACTOR_FIT))
+    return AccuracyTable(rows)

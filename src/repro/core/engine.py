@@ -1,0 +1,203 @@
+"""Multi-port occupancy engine — the O3-pipeline analogue at HLO altitude.
+
+gem5 models instruction issue into reservation stations; at HLO altitude the
+equivalent resources are *ports*: MXU (matrix), VPU (vector), DMA (HBM), ICI
+(interconnect).  Every op contributes occupancy to its port; the overlap
+model (paper: OoO execution hiding memory latency; here: XLA async DMA /
+async collectives) combines port totals into an execution-time estimate:
+
+    compute      = t_mxu + t_vpu
+    mem_exposed  = max(0, t_mem - dma_overlap * compute)
+    ici_exposed  = max(0, t_ici - ici_overlap * compute)
+    t_est        = compute + mem_exposed + ici_exposed + startup
+    t_roofline   = max(t_mxu + t_vpu, t_mem, t_ici)      (perfect overlap)
+
+Collective times use ring-algorithm factors on ``group_size`` with a
+bidirectional ring (2 links) per collective.
+"""
+from __future__ import annotations
+
+import math
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from .hlo import OpStat, Program
+from .hwspec import HardwareSpec
+
+
+@dataclass
+class OpTime:
+    op: OpStat
+    t_compute: float
+    t_mem: float
+    t_ici: float
+    port: str
+
+    @property
+    def t_op(self) -> float:
+        return max(self.t_compute, self.t_mem, self.t_ici)
+
+
+@dataclass
+class EngineResult:
+    port_busy: Dict[str, float]
+    t_est: float
+    t_roofline: float
+    t_serial: float
+    n_ops: float
+    startup: float
+    mxu_utilization: float
+    by_class_time: Dict[str, float]
+    top_ops: List[OpTime]
+    collective_time_by_kind: Dict[str, float]
+
+    @property
+    def bound_by(self) -> str:
+        return max(self.port_busy, key=lambda k: self.port_busy[k])
+
+
+# ring-algorithm bandwidth factors: time = factor(g) * payload / bw
+def collective_factor(kind: str, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g
+    if kind == "all-gather":
+        return float(g - 1)          # payload = shard bytes
+    if kind == "reduce-scatter":
+        return (g - 1) / g           # payload = full buffer
+    if kind == "all-to-all":
+        return (g - 1) / g
+    if kind == "collective-permute":
+        return 1.0
+    return 1.0
+
+
+def simulate_program(prog: Program, hw: HardwareSpec,
+                     links_per_collective: int = 2,
+                     compute_dtype: Optional[str] = None) -> EngineResult:
+    """``compute_dtype``: the model's intended compute dtype.  When set to a
+    16-bit type, f32 ops are costed as that type (flops AND bytes AND
+    collective payloads).  This inverts XLA:CPU's float-normalization pass
+    (the host has no native bf16, so the partitioned module we parse holds
+    f32-promoted dots/buffers that the TPU target executes natively in
+    bf16) — the paper's operand-type-dependent OpClass table, applied in
+    reverse.  f32-by-design state (optimizer moments, the loss) is also
+    halved; it is step-frequency (not layer x microbatch frequency) traffic,
+    so the error is bounded and documented in DESIGN.md."""
+    port_busy: Dict[str, float] = defaultdict(float)
+    by_class: Dict[str, float] = defaultdict(float)
+    coll_kind: Dict[str, float] = defaultdict(float)
+    op_times: List[OpTime] = []
+    t_serial = 0.0
+    startup = 0.0
+    n_ops = 0.0
+    useful_f, padded_f = 0.0, 0.0
+
+    ici_bw = links_per_collective * hw.ici_bw_per_link
+    denorm = compute_dtype in ("bf16", "f16")
+
+    def eff_dtype(o: OpStat) -> str:
+        if denorm and o.dtype == "f32":
+            return compute_dtype
+        return o.dtype
+
+    def eff_bytes(o: OpStat) -> float:
+        if denorm and o.dtype == "f32":
+            return 0.5 * o.bytes_accessed
+        return o.bytes_accessed
+
+    def mem_bw(nbytes: float) -> float:
+        if hw.cache_model and nbytes <= hw.vmem_bytes:
+            return hw.vmem_bw
+        return hw.hbm_read_bw
+
+    def trans_time(o: OpStat) -> float:
+        """Per-opcode latency table (paper's OpClass extension)."""
+        if not o.trans_by_opcode:
+            return o.transcendentals * hw.transcendental_factor
+        return sum(v * hw.opcode_factor.get(k, hw.transcendental_factor)
+                   for k, v in o.trans_by_opcode.items())
+
+    for o in prog.ops:
+        t_c = t_m = t_i = 0.0
+        port = "vpu"
+        if o.opclass == "matmul":
+            port = "mxu"
+            util = 1.0
+            if o.dot_dims:
+                m, n, k = o.dot_dims
+                if min(m, n, k) < hw.min_matmul_dim_for_mxu:
+                    # tiny contraction/row dims: XLA emits a VPU multiply-
+                    # reduce, NOT an MXU matmul — no 128-tile quantization
+                    # (8-lane sublane padding only).
+                    port = "vpu"
+                    util = m * n * k / (max(m, 8 * math.ceil(m / 8), 1)
+                                        * n * k) if m else 1.0
+                else:
+                    tm, tk, tn = hw.mxu_tile
+                    pm = math.ceil(m / tm) * tm
+                    pk = math.ceil(k / tk) * tk
+                    pn = math.ceil(n / tn) * tn
+                    util = (m * n * k) / max(pm * pn * pk, 1)
+            padded = o.flops / max(util, 1e-9)
+            useful_f += o.flops * o.count
+            padded_f += padded * o.count
+            peak = (hw.matmul_flops(eff_dtype(o)) if port == "mxu"
+                    else hw.vector_flops(eff_dtype(o)))
+            t_c = padded / peak
+            t_m = eff_bytes(o) / mem_bw(eff_bytes(o))
+        elif o.opclass in ("elementwise", "reduce"):
+            base = o.flops - o.transcendentals
+            t_c = (base + trans_time(o)) / hw.vector_flops(eff_dtype(o))
+            t_m = eff_bytes(o) / mem_bw(eff_bytes(o))
+        elif o.opclass == "transcendental":
+            t_c = trans_time(o) / hw.vector_flops(eff_dtype(o))
+            t_m = eff_bytes(o) / mem_bw(eff_bytes(o))
+        elif o.opclass == "data":
+            t_m = eff_bytes(o) / mem_bw(eff_bytes(o))
+            port = "mem"
+        elif o.opclass == "collective":
+            f = collective_factor(o.opcode, o.group_size)
+            payload = (0.5 * o.comm_bytes
+                       if denorm and o.dtype == "f32" else o.comm_bytes)
+            t_i = f * payload / ici_bw + hw.collective_startup_us * 1e-6
+            port = "ici"
+            coll_kind[o.opcode] += t_i * o.count
+        else:
+            continue
+
+        # OpClass throughput overrides (the paper's operand-type table)
+        scale = hw.opclass_throughput.get(o.opclass, 1.0)
+        t_c *= scale
+
+        if port in ("mxu", "vpu"):
+            port_busy[port] += t_c * o.count
+        port_busy["mem"] += t_m * o.count
+        port_busy["ici"] += t_i * o.count
+        by_class[o.opclass] += max(t_c, t_m, t_i) * o.count
+        t_serial += max(t_c, t_m, t_i) * o.count
+        startup += hw.op_startup_ns * 1e-9 * o.count
+        n_ops += o.count
+        op_times.append(OpTime(o, t_c, t_m, t_i, port))
+
+    compute = port_busy["mxu"] + port_busy["vpu"]
+    mem_exposed = max(0.0, port_busy["mem"] - hw.dma_overlap * compute)
+    ici_exposed = max(0.0, port_busy["ici"] - hw.ici_overlap * compute)
+    t_est = compute + mem_exposed + ici_exposed + startup
+    t_roofline = max(compute, port_busy["mem"], port_busy["ici"])
+
+    op_times.sort(key=lambda t: -(t.t_op * t.op.count))
+    return EngineResult(
+        port_busy=dict(port_busy),
+        t_est=t_est,
+        t_roofline=t_roofline,
+        t_serial=t_serial + startup,
+        n_ops=n_ops,
+        startup=startup,
+        mxu_utilization=(useful_f / padded_f) if padded_f else 1.0,
+        by_class_time=dict(by_class),
+        top_ops=op_times[:20],
+        collective_time_by_kind=dict(coll_kind),
+    )

@@ -1,0 +1,91 @@
+"""Three-term roofline analysis (assignment §ROOFLINE + the paper's purpose).
+
+Terms, per (arch x shape x mesh) cell, following the assignment formulas with
+per-device quantities (the compiled HLO is post-SPMD, i.e. per-device):
+
+    compute    = flops_per_device    / peak_flops          [s]
+    memory     = bytes_per_device    / hbm_bw              [s]
+    collective = comm_bytes_per_dev  / link_bw             [s]
+
+(equivalently  HLO_FLOPs_global / (chips x peak)  since
+ HLO_FLOPs_global = chips x flops_per_device).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from .engine import EngineResult, simulate_program
+from .hlo import Program
+from .hwspec import HardwareSpec, TPU_V5E
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    comm_bytes_per_device: float
+    model_flops_global: float          # 6ND (train) / 2ND (inference)
+    hlo_flops_global: float
+    n_chips: int
+    mxu_utilization: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=lambda k: terms[k])
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs: how much compiled compute is useful
+        (catches remat recompute + routing/dispatch overhead + padding)."""
+        return self.model_flops_global / max(self.hlo_flops_global, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute term / bound — 1.0 means pure-compute-limited (ideal for
+        a training step); the headline §Perf number."""
+        return self.compute_s / max(self.t_bound, 1e-30)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(dominant=self.dominant,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def model_flops(param_count_active: int, tokens: int, kind: str) -> float:
+    """6*N*D for training (fwd+bwd), 2*N*D for inference forward."""
+    if kind == "train":
+        return 6.0 * param_count_active * tokens
+    return 2.0 * param_count_active * tokens
+
+
+def roofline_from_program(prog: Program, hw: HardwareSpec, n_chips: int,
+                          model_flops_global: float,
+                          compute_dtype: str = "bf16") -> Roofline:
+    f = prog.flops
+    b = prog.bytes_normalized(compute_dtype)
+    c = prog.comm_normalized(compute_dtype)
+    return Roofline(
+        compute_s=f / hw.matmul_flops(compute_dtype),
+        memory_s=b / hw.hbm_read_bw,
+        collective_s=c / hw.ici_bw_per_link,
+        flops_per_device=f,
+        bytes_per_device=b,
+        comm_bytes_per_device=c,
+        model_flops_global=model_flops_global,
+        hlo_flops_global=f * n_chips,
+        n_chips=n_chips,
+        mxu_utilization=prog.matmul_utilization(hw.mxu_tile),
+    )

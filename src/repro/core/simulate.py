@@ -1,0 +1,114 @@
+"""Top-level simulator API: compiled artifact -> SimReport.
+
+    lowered  = jax.jit(step, ...).lower(**input_specs(arch))
+    compiled = lowered.compile()
+    report   = simulate(compiled, hw=TPU_V5E, n_chips=256,
+                        model_flops_global=6 * N * D)
+    print(report.pa)
+
+This is the paper's end-to-end flow: application binary -> simulator ->
+execution-cycle estimate + PA data, before the target hardware exists.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+from .engine import EngineResult, simulate_program
+from .hlo import Program, parse_program
+from .hwspec import HardwareSpec, TPU_V5E
+from .pa import pa_report
+from .roofline import Roofline, roofline_from_program
+
+
+@dataclass
+class SimReport:
+    hw: str
+    n_chips: int
+    roofline: Roofline
+    engine: EngineResult
+    program_summary: Dict[str, Any]
+    pa: str
+    xla_cost_analysis: Optional[Dict[str, float]] = None
+    memory_analysis: Optional[Dict[str, float]] = None
+
+    @property
+    def t_est(self) -> float:
+        return self.engine.t_est
+
+    def to_json(self) -> str:
+        d = {
+            "hw": self.hw,
+            "n_chips": self.n_chips,
+            "roofline": self.roofline.as_dict(),
+            "engine": {
+                "t_est": self.engine.t_est,
+                "t_roofline": self.engine.t_roofline,
+                "t_serial": self.engine.t_serial,
+                "port_busy": self.engine.port_busy,
+                "by_class_time": self.engine.by_class_time,
+                "collective_time_by_kind": self.engine.collective_time_by_kind,
+                "n_ops": self.engine.n_ops,
+                "mxu_utilization": self.engine.mxu_utilization,
+            },
+            "program": self.program_summary,
+            "xla_cost_analysis": self.xla_cost_analysis,
+            "memory_analysis": self.memory_analysis,
+        }
+        return json.dumps(d, indent=1, sort_keys=True)
+
+
+def _mem_stats(compiled) -> Optional[Dict[str, float]]:
+    try:
+        m = compiled.memory_analysis()
+        return {
+            "argument_bytes": float(m.argument_size_in_bytes),
+            "output_bytes": float(m.output_size_in_bytes),
+            "temp_bytes": float(m.temp_size_in_bytes),
+            "alias_bytes": float(m.alias_size_in_bytes),
+            "peak_bytes_est": float(m.argument_size_in_bytes
+                                    + m.output_size_in_bytes
+                                    + m.temp_size_in_bytes
+                                    - m.alias_size_in_bytes),
+        }
+    except Exception:
+        return None
+
+
+def _cost_stats(compiled) -> Optional[Dict[str, float]]:
+    try:
+        ca = compiled.cost_analysis()
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and not k.startswith("utilization")}
+    except Exception:
+        return None
+
+
+def simulate(compiled, hw: HardwareSpec = TPU_V5E, n_chips: int = 1,
+             model_flops_global: float = 0.0, compute_dtype: str = "bf16",
+             title: str = "") -> SimReport:
+    """``compiled`` is a jax Compiled object, or raw HLO text."""
+    if isinstance(compiled, str):
+        text = compiled
+        cost = mem = None
+    else:
+        text = compiled.as_text()
+        cost = _cost_stats(compiled)
+        mem = _mem_stats(compiled)
+    prog = parse_program(text)
+    eng = simulate_program(prog, hw, compute_dtype=compute_dtype)
+    rf = roofline_from_program(prog, hw, n_chips, model_flops_global,
+                               compute_dtype)
+    summary = {
+        "flops_per_device": prog.flops,
+        "bytes_per_device": prog.bytes_accessed,
+        "comm_bytes_per_device": prog.comm_bytes,
+        "comm_by_collective": prog.comm_by_collective(),
+        "by_class": prog.by_class(),
+        "n_partitions": prog.n_partitions,
+    }
+    return SimReport(hw=hw.name, n_chips=n_chips, roofline=rf, engine=eng,
+                     program_summary=summary, pa=pa_report(rf, eng, prog, title),
+                     xla_cost_analysis=cost, memory_analysis=mem)

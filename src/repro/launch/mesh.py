@@ -1,0 +1,58 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* the first
+jax initialization, and smoke tests/benches must keep seeing 1 device.
+
+Mesh axes:
+  single-pod:  (16, 16)      -> ("data", "model")          256 chips
+  multi-pod:   (2, 16, 16)   -> ("pod", "data", "model")   512 chips
+
+The axis-order convention follows TPU ICI reality: 'model' is the innermost
+(fastest-varying) axis so tensor-parallel collectives ride nearest-neighbour
+links; 'pod' is outermost (slowest links, data-parallel only).  Scaling to
+1000+ nodes = more pods on the 'pod' axis (pure DP + compressed grad sync)
+or a larger per-pod torus — the sharding rules are expressed against logical
+axes and never name mesh sizes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         devices=None) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    if devices is None:
+        devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)}; "
+            "the dry-run must set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=512 before importing jax")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Tiny mesh over whatever devices exist (CPU smoke tests / examples)."""
+    n = data * model
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=devices[:n])
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def n_chips(mesh: Mesh) -> int:
+    return int(mesh.devices.size)

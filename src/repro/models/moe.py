@@ -1,0 +1,138 @@
+"""Mixture-of-Experts FFN: sort-based capacity routing (gather/scatter form).
+
+Design notes (vs the GShard one-hot-einsum formulation):
+
+* Dispatch/combine are *gathers/scatters*, not one-hot matmuls — the one-hot
+  einsum would add O(T·E·C·d) fake FLOPs that swamp the roofline compute term
+  with work no deployed system performs.
+* Tokens are routed within *groups* (one group per sequence; one global group
+  for decode).  The group axis carries the data sharding, so routing math is
+  fully local; only the (G, E, C, d) dispatched tensor reshards from
+  G-sharded to E-sharded (EP) — the all-to-all the paper('s roofline) sees.
+* EP vs expert-TP is decided by divisibility in the sharding rules:
+  llama4 (16e on a 16-way 'model' axis) -> EP; grok (8e) -> experts
+  replicated, each expert's d_ff sharded 16-way ('mlp' -> 'model').
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.sharding import lsc
+from .params import P
+
+
+def moe_params(cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d, f, E = cfg.d_model, cfg.d_ff, m.n_experts
+    out = {"router": P((d, E), ("embed", "experts"))}
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        out["wi_gate"] = P((E, d, f), ("experts", "embed", "mlp"))
+        out["wi_up"] = P((E, d, f), ("experts", "embed", "mlp"))
+        out["wo"] = P((E, f, d), ("experts", "mlp", "embed"))
+    else:
+        out["wi"] = P((E, d, f), ("experts", "embed", "mlp"))
+        out["wo"] = P((E, f, d), ("experts", "mlp", "embed"))
+    if m.n_shared_experts:
+        fs = f * m.n_shared_experts
+        out["shared_wi_gate"] = P((d, fs), ("embed", "mlp"))
+        out["shared_wi_up"] = P((d, fs), ("embed", "mlp"))
+        out["shared_wo"] = P((fs, d), ("mlp", "embed"))
+    return out
+
+
+def capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = math.ceil(tokens_per_group * m.top_k * m.capacity_factor / m.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8 lanes
+
+
+def _route_group(x: jax.Array, expert_idx: jax.Array, gates: jax.Array,
+                 C: int, E: int):
+    """Per-group routing. x: (T, d); expert_idx/gates: (T, k).
+    Returns (dispatched (E, C, d), st (T*k,), dest (T*k,), keep (T*k,))."""
+    T, k = expert_idx.shape
+    e_flat = expert_idx.reshape(-1)
+    t_flat = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(e_flat, stable=True)
+    se, st = e_flat[order], t_flat[order]
+    # rank within expert = index - first index of that expert in sorted order
+    expert_start = jnp.searchsorted(se, jnp.arange(E), side="left")
+    rank = jnp.arange(T * k) - expert_start[se]
+    keep = rank < C
+    dest = jnp.where(keep, se * C + jnp.minimum(rank, C - 1), E * C)
+    # slot -> source token (E*C+1 with trash row)
+    src = jnp.full((E * C + 1,), T, jnp.int32).at[dest].set(st.astype(jnp.int32))
+    xpad = jnp.concatenate([x, jnp.zeros((1, x.shape[-1]), x.dtype)], axis=0)
+    dispatched = jnp.take(xpad, src[: E * C], axis=0).reshape(E, C, -1)
+    return dispatched, st, dest, keep, order
+
+
+def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig,
+              train: bool) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss). Groups = sequences (train/prefill) or
+    one global group (decode, S == 1)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.n_experts, m.top_k
+    if S == 1:
+        xg = x.reshape(1, B, d)                       # one group for decode
+    else:
+        xg = x                                        # (G=B, S, d)
+    G, T, _ = xg.shape
+    C = capacity(T, cfg)
+
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(xg.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)   # (G, T, k)
+    if k > 1:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=(0, 1))                               # (E,)
+    fe = jnp.mean(
+        (jax.nn.one_hot(expert_idx, E).sum(axis=2) > 0).astype(jnp.float32),
+        axis=(0, 1),
+    )
+    aux = E * jnp.sum(me * fe) * m.aux_loss_coef
+
+    dispatched, st, dest, keep, order = jax.vmap(
+        lambda xx, ee, gg: _route_group(xx, ee, gg, C, E)
+    )(xg, expert_idx, gate_vals)
+    dispatched = lsc(dispatched, "batch", "experts", "capacity", "embed")
+
+    # expert FFN: (G, E, C, d) x (E, d, f)
+    if "wi_gate" in p:
+        g = jnp.einsum("gecd,edf->gecf", dispatched, p["wi_gate"])
+        u = jnp.einsum("gecd,edf->gecf", dispatched, p["wi_up"])
+        act = jax.nn.silu(g) if cfg.mlp_kind == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = jnp.einsum("gecd,edf->gecf", dispatched, p["wi"])
+        h = jnp.square(jax.nn.relu(h)) if cfg.mlp_kind == "sq_relu" else jax.nn.gelu(h)
+    h = lsc(h, "batch", "experts", "capacity", "mlp")
+    ys = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+    ys = lsc(ys, "batch", "experts", "capacity", "embed")
+
+    # combine: gather expert outputs back to tokens, weighted by gates
+    def _combine(ys_g, st_g, dest_g, keep_g, gates_g, order_g):
+        ys_flat = ys_g.reshape(E * C, d)
+        ys_flat = jnp.concatenate([ys_flat, jnp.zeros((1, d), ys_g.dtype)], axis=0)
+        rows = jnp.take(ys_flat, dest_g, axis=0)                    # (T*k, d)
+        w = gates_g.reshape(-1)[order_g] * keep_g
+        rows = rows * w[:, None].astype(ys_g.dtype)
+        return jnp.zeros((T, d), ys_g.dtype).at[st_g].add(rows)
+
+    out = jax.vmap(_combine)(ys, st, dest, keep, gate_vals, order)
+
+    if m.n_shared_experts:
+        g = jnp.einsum("gtd,df->gtf", xg, p["shared_wi_gate"])
+        u = jnp.einsum("gtd,df->gtf", xg, p["shared_wi_up"])
+        act = jax.nn.silu(g) if cfg.mlp_kind == "swiglu" else jax.nn.gelu(g)
+        out = out + jnp.einsum("gtf,fd->gtd", act * u, p["shared_wo"])
+
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,97 @@
+"""Parameter-tree machinery: declare shapes+logical axes once, then derive
+abstract trees (for dry-run lowering), initialized trees (for real runs) and
+sharding trees (for pjit in/out shardings) from the same declaration.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class P:
+    """One parameter leaf: shape + logical axes + init recipe."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"       # normal | zeros | ones | embed | conv | a_log | dt_bias
+    scale: float = 1.0         # fan-in style scale override (0 -> auto)
+    dtype: Optional[str] = None  # leaf dtype override (int8 KV caches etc.)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_leaf(x) -> bool:
+    return isinstance(x, P)
+
+
+def tree_map(f: Callable, tree):
+    return jax.tree.map(f, tree, is_leaf=is_leaf)
+
+
+def abstract(tree, dtype=jnp.bfloat16):
+    def mk(p: P):
+        return jax.ShapeDtypeStruct(p.shape, jnp.dtype(p.dtype or dtype))
+
+    return tree_map(mk, tree)
+
+
+def logical_axes(tree):
+    return tree_map(lambda p: p.axes, tree)
+
+
+def shardings(tree, rules, dtype=jnp.bfloat16):
+    """NamedSharding tree from a spec tree + MeshRules."""
+    return tree_map(lambda p: rules.param_sharding(p.axes, p.shape), tree)
+
+
+def _init_leaf(key, p: P, dtype):
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "a_log":
+        # mamba2: A in [1, 16) -> log
+        u = jax.random.uniform(key, p.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if p.init == "dt_bias":
+        # softplus^-1 of dt ~ U[1e-3, 1e-1]
+        dt = jnp.exp(
+            jax.random.uniform(key, p.shape, jnp.float32)
+            * (math.log(0.1) - math.log(1e-3))
+            + math.log(1e-3)
+        )
+        inv = dt + jnp.log(-jnp.expm1(-dt))
+        return inv.astype(dtype)
+    if p.init == "embed":
+        return (jax.random.normal(key, p.shape, jnp.float32) * 0.02).astype(dtype)
+    # 'normal' / 'conv': truncated-normal, fan-in scaled
+    fan_in = p.shape[0] if len(p.shape) > 1 else p.shape[-1]
+    if p.init == "conv":
+        fan_in = p.shape[-1] * 1
+    std = p.scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, p.shape, jnp.float32) * std).astype(dtype)
+
+
+def init(tree, key, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_leaf)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(k, p, dtype) for k, p in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def count(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_leaf)
+    return sum(int(np.prod(p.shape)) for p in leaves)
+
+
+def bytes_of(tree, dtype=jnp.bfloat16) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_leaf)
+    return sum(int(np.prod(p.shape))
+               * jnp.dtype(p.dtype or dtype).itemsize for p in leaves)

@@ -1,0 +1,63 @@
+"""Collective helpers + byte accounting (per-collective payload math).
+
+The analytic ring-model here is the napkin-math side of the engine's
+collective port: given a mesh and a payload, predict the per-device bytes
+and time a collective should cost.  §Perf hypotheses quote these numbers;
+the dry-run's parsed HLO then confirms or refutes them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from jax.sharding import Mesh
+
+
+@dataclass(frozen=True)
+class CollectiveCost:
+    kind: str
+    group_size: int
+    payload_bytes: float         # per-device operand bytes
+    link_bw: float               # bytes/s per direction
+    links: int = 2               # bidirectional ring
+
+    @property
+    def wire_bytes(self) -> float:
+        g = self.group_size
+        if g <= 1:
+            return 0.0
+        if self.kind == "all-reduce":
+            return 2.0 * (g - 1) / g * self.payload_bytes
+        if self.kind == "all-gather":
+            return (g - 1) * self.payload_bytes      # payload = shard bytes
+        if self.kind == "reduce-scatter":
+            return (g - 1) / g * self.payload_bytes  # payload = full buffer
+        if self.kind == "all-to-all":
+            return (g - 1) / g * self.payload_bytes
+        if self.kind == "collective-permute":
+            return self.payload_bytes
+        return self.payload_bytes
+
+    @property
+    def t_seconds(self) -> float:
+        return self.wire_bytes / (self.links * self.link_bw)
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def grad_sync_bytes(param_bytes: float, mesh: Mesh,
+                    compressed: bool = False) -> Dict[str, float]:
+    """Cross-pod gradient sync cost: bf16 all-reduce vs int8-EF scheme.
+
+    Returns per-device wire bytes for both schemes (the §Perf comparison).
+    """
+    g = axis_size(mesh, "pod")
+    if g <= 1:
+        return {"all_reduce": 0.0, "compressed": 0.0}
+    ar = 2.0 * (g - 1) / g * param_bytes                     # bf16 AR
+    rs = (g - 1) / g * param_bytes                           # bf16 RS half
+    ag = (g - 1) / g * (param_bytes / 2 + param_bytes / 2 / 128 * 4)
+    # ^ int8 payload (half of bf16 bytes) + fp32 scale per 128 block
+    return {"all_reduce": ar, "compressed": rs + ag}

@@ -1,0 +1,187 @@
+"""Logical-axis sharding: one table maps logical axes -> mesh axes.
+
+Model code never names mesh axes.  It annotates parameters and activations
+with *logical* axes ('batch', 'heads', 'mlp', ...).  A ``MeshRules`` object —
+installed as a context — resolves logical axes to ``PartitionSpec``s against
+the active mesh, with two safety rails:
+
+* **divisibility fallback**: an assignment is dropped (dim left replicated)
+  when the dim size is not divisible by the product of assigned mesh axes —
+  e.g. qwen1.5-32b's 40 heads on a 16-way 'model' axis, or batch=1 in
+  long_500k.  This is what lets one rule table drive all 10 architectures.
+* **uniqueness**: a mesh axis is used at most once per spec (GSPMD rule);
+  later dims silently lose a conflicting assignment.
+
+Scaling out = changing the mesh tuple + this table; nothing in the model.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+# --------------------------------------------------------------------------- rules
+# Parameter logical axes.  'embed' rides the FSDP axis (ZeRO-3 within a pod);
+# tensor-parallel axes ride 'model'.
+PARAM_RULES = {
+    "embed": ("data",),          # FSDP
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "inner": ("model",),         # mamba d_inner / conv channels
+    "ssm_heads": ("model",),
+    "experts": ("model",),       # EP (dropped automatically when E % 16 != 0 -> expert-TP via 'mlp')
+    "head_dim": ("model",),      # fallback TP when head counts don't divide (qwen32b/whisper/paligemma)
+    "state": None,
+    "layers": None,
+    "kwidth": None,
+}
+
+# Activation logical axes.
+ACT_RULES = {
+    "batch": ("pod", "data"),    # 'pod' silently absent on single-pod meshes
+    "seq": None,
+    # KV-cache sequence sharding (decode SP): 'model' first — GQA KV-head
+    # counts (1/2/8) rarely divide the 16-way tensor axis but 32k/500k
+    # sequences always do; 'data' joins when batch is too small to use it
+    # (long_500k's batch=1 leaves 'data' free -> 256-way cache sharding).
+    "kvseq": ("model", "data"),
+    "embed": None,
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "inner": ("model",),
+    "ssm_heads": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    # head_dim is a CONTRACTION dim of the attention score matmul: sharding
+    # it turns every score block into a partial-sum all-reduce (measured:
+    # whisper prefill_32k 58.9 s collective term).  Activations therefore
+    # never shard head_dim; archs whose head counts don't divide the tensor
+    # axis fall back to sequence parallelism ('sp_seq'/'rseq', enabled per
+    # arch in launch/cell.py).
+    "head_dim": None,
+    "sp_seq": None,              # attention q/out seq axis, SP fallback
+    "rseq": None,                # residual-stream seq axis, SP fallback
+    "state": None,
+    "frames": None,
+    "capacity": None,
+    "q_group": None,             # GQA group axis of decode scores (tiny)
+    "chunks": None,              # SSD chunk axis
+    "layers": None,              # stacked-layer axis of cache trees
+    "kwidth": None,              # conv-cache kernel-width axis
+}
+
+
+@dataclass
+class MeshRules:
+    mesh: Mesh
+    param_rules: dict = field(default_factory=lambda: dict(PARAM_RULES))
+    act_rules: dict = field(default_factory=lambda: dict(ACT_RULES))
+
+    def _axis_size(self, name: str) -> int:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape)).get(name, 0)
+
+    def _resolve(self, rules: dict, axes: Sequence[Optional[str]], shape) -> PartitionSpec:
+        used: set[str] = set()
+        out = []
+        for i, ax in enumerate(axes):
+            assignment: Optional[tuple] = None
+            if ax is not None:
+                want = rules.get(ax)
+                if want:
+                    picked = []
+                    prod = 1
+                    for m in want:
+                        sz = self._axis_size(m)
+                        if sz and m not in used:
+                            picked.append(m)
+                            prod *= sz
+                    if picked and shape is not None and shape[i] % prod == 0 and shape[i] > 0:
+                        assignment = tuple(picked)
+                        used.update(picked)
+                    elif picked and shape is not None:
+                        # try a prefix of the requested axes (e.g. drop 'pod')
+                        for j in range(len(picked) - 1, 0, -1):
+                            sub = picked[:j]
+                            p = 1
+                            for m in sub:
+                                p *= self._axis_size(m)
+                            if shape[i] % p == 0:
+                                assignment = tuple(sub)
+                                used.update(sub)
+                                break
+            if assignment is None:
+                out.append(None)
+            elif len(assignment) == 1:
+                out.append(assignment[0])
+            else:
+                out.append(assignment)
+        return PartitionSpec(*out)
+
+    def param_spec(self, axes, shape) -> PartitionSpec:
+        return self._resolve(self.param_rules, axes, shape)
+
+    def act_spec(self, axes, shape) -> PartitionSpec:
+        return self._resolve(self.act_rules, axes, shape)
+
+    def param_sharding(self, axes, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self.param_spec(axes, shape))
+
+    def act_sharding(self, axes, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self.act_spec(axes, shape))
+
+
+# --------------------------------------------------------------------- context
+_STATE = threading.local()
+
+
+def current_rules() -> Optional[MeshRules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[MeshRules]):
+    prev = current_rules()
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def lsc(x, *axes):
+    """Logical sharding constraint (activation rules); no-op outside a
+    MeshRules context."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.act_spec(axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def lsc_param(x, *axes):
+    """Logical sharding constraint under the PARAMETER rules (FSDP layout).
+    Used inside scan bodies to pin per-layer weights — and, via the
+    transpose, their cotangents — to the FSDP shard."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.param_spec(axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def make_rules(mesh: Mesh, overrides: Optional[dict] = None,
+               act_overrides: Optional[dict] = None) -> MeshRules:
+    r = MeshRules(mesh)
+    if overrides:
+        r.param_rules.update(overrides)
+    if act_overrides:
+        r.act_rules.update(act_overrides)
+    return r

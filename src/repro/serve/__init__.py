@@ -1,0 +1,9 @@
+"""Serving: KV-cache management, prefill/decode step builders, batching."""
+from .engine import (  # noqa: F401
+    DecodeState,
+    ServeEngine,
+    make_decode_step,
+    make_prefill_step,
+    sample_logits,
+)
+from .kvcache import cache_abstract, cache_shardings  # noqa: F401

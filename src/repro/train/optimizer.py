@@ -1,0 +1,205 @@
+"""Optimizers with sharded state: AdamW and Adafactor.
+
+State trees mirror the parameter tree leaf-for-leaf, so the parameter
+sharding tree applies verbatim to optimizer state (ZeRO-3: state lives where
+the param shard lives).  Pure-functional: ``init(params) -> state``,
+``update(grads, state, params, lr) -> (new_params, new_state)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"           # adamw | adafactor
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # adafactor
+    decay_rate: float = 0.8
+    min_dim_size_to_factor: int = 128
+    state_dtype: Any = jnp.float32
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+# ------------------------------------------------------------------- AdamW
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params, cfg: OptConfig) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def adamw_update(grads, state: AdamWState, params, lr, cfg: OptConfig):
+    step = state.step + 1
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(cfg.state_dtype)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * jnp.square(gf)
+        mhat = m2 / c1
+        vhat = v2 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(cfg.state_dtype)
+        p2 = p.astype(cfg.state_dtype) - lr * delta
+        return p2.astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v)
+
+
+# --------------------------------------------------------------- Adafactor
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    # per-leaf: either (vr, vc) factored or (v,) full; encoded as dicts
+    vr: Any
+    vc: Any
+    v: Any
+
+
+def _factored(shape, cfg: OptConfig) -> bool:
+    return (len(shape) >= 2 and shape[-1] >= cfg.min_dim_size_to_factor
+            and shape[-2] >= cfg.min_dim_size_to_factor)
+
+
+def adafactor_init(params, cfg: OptConfig) -> AdafactorState:
+    def vr_leaf(p):
+        if _factored(p.shape, cfg):
+            return jnp.zeros(p.shape[:-1], cfg.state_dtype)
+        return jnp.zeros((1,), cfg.state_dtype)
+
+    def vc_leaf(p):
+        if _factored(p.shape, cfg):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], cfg.state_dtype)
+        return jnp.zeros((1,), cfg.state_dtype)
+
+    def v_leaf(p):
+        if _factored(p.shape, cfg):
+            return jnp.zeros((1,), cfg.state_dtype)
+        return jnp.zeros(p.shape, cfg.state_dtype)
+
+    return AdafactorState(step=jnp.zeros((), jnp.int32),
+                          vr=jax.tree.map(vr_leaf, params),
+                          vc=jax.tree.map(vc_leaf, params),
+                          v=jax.tree.map(v_leaf, params))
+
+
+def adafactor_update(grads, state: AdafactorState, params, lr, cfg: OptConfig):
+    step = state.step + 1
+    beta = 1.0 - (step.astype(jnp.float32)) ** (-cfg.decay_rate)
+
+    def upd(p, g, vr, vc, v):
+        gf = g.astype(cfg.state_dtype)
+        g2 = jnp.square(gf) + 1e-30
+        if _factored(p.shape, cfg):
+            vr2 = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc2 = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+            denom = (vr2[..., None] * vc2[..., None, :]
+                     / jnp.maximum(jnp.mean(vr2, axis=-1, keepdims=True)
+                                   [..., None], 1e-30))
+            update = gf * jax.lax.rsqrt(denom + cfg.eps)
+            v2 = v
+        else:
+            v2 = beta * v + (1 - beta) * g2
+            update = gf * jax.lax.rsqrt(v2 + cfg.eps)
+            vr2, vc2 = vr, vc
+        # update clipping (RMS <= 1) as in the adafactor paper
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        p2 = (p.astype(cfg.state_dtype)
+              - lr * update - lr * cfg.weight_decay * p.astype(cfg.state_dtype))
+        return p2.astype(p.dtype), vr2, vc2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_vr = treedef.flatten_up_to(state.vr)
+    flat_vc = treedef.flatten_up_to(state.vc)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(*t) for t in zip(flat_p, flat_g, flat_vr, flat_vc, flat_v)]
+    return (treedef.unflatten([o[0] for o in out]),
+            AdafactorState(step=step,
+                           vr=treedef.unflatten([o[1] for o in out]),
+                           vc=treedef.unflatten([o[2] for o in out]),
+                           v=treedef.unflatten([o[3] for o in out])))
+
+
+# ------------------------------------------------------------------ facade
+def make_optimizer(name: str, cfg: Optional[OptConfig] = None):
+    cfg = cfg or OptConfig(name=name)
+    if name == "adamw":
+        return (lambda p: adamw_init(p, cfg),
+                lambda g, s, p, lr: adamw_update(g, s, p, lr, cfg), cfg)
+    if name == "adafactor":
+        return (lambda p: adafactor_init(p, cfg),
+                lambda g, s, p, lr: adafactor_update(g, s, p, lr, cfg), cfg)
+    raise ValueError(f"unknown optimizer {name}")
+
+
+def state_spec_tree(name: str, param_specs, cfg: Optional[OptConfig] = None):
+    """Optimizer-state tree of P-leaves (shapes + logical axes) derived from
+    the parameter spec tree — ZeRO-3: state shards exactly like its param.
+    Used to build dry-run input ShapeDtypeStructs and shardings."""
+    from ..models.params import P, tree_map
+
+    cfg = cfg or OptConfig(name=name)
+    scalar = P((), (), "zeros")
+    if name == "adamw":
+        mirror = tree_map(lambda p: P(p.shape, p.axes, "zeros"), param_specs)
+        return AdamWState(step=scalar, mu=mirror, nu=mirror)
+    if name == "adafactor":
+        def vr(p):
+            if _factored(p.shape, cfg):
+                return P(p.shape[:-1], p.axes[:-1], "zeros")
+            return P((1,), (None,), "zeros")
+
+        def vc(p):
+            if _factored(p.shape, cfg):
+                return P(p.shape[:-2] + p.shape[-1:],
+                         p.axes[:-2] + p.axes[-1:], "zeros")
+            return P((1,), (None,), "zeros")
+
+        def v(p):
+            if _factored(p.shape, cfg):
+                return P((1,), (None,), "zeros")
+            return P(p.shape, p.axes, "zeros")
+
+        return AdafactorState(step=scalar, vr=tree_map(vr, param_specs),
+                              vc=tree_map(vc, param_specs),
+                              v=tree_map(v, param_specs))
+    raise ValueError(f"unknown optimizer {name}")

@@ -1,0 +1,68 @@
+"""Learning-rate schedules (pure functions of the step counter).
+
+All schedules are jax-traceable (used inside the jitted train step) and
+return fp32 scalars.  ``make_schedule`` is the registry entry point.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ScheduleConfig:
+    name: str = "cosine"             # constant | linear | cosine | rsqrt
+    base_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1        # floor as a fraction of base_lr
+
+
+def _warmup(step, cfg: ScheduleConfig):
+    w = jnp.maximum(cfg.warmup_steps, 1)
+    return jnp.minimum(1.0, (step + 1) / w)
+
+
+def constant(step, cfg: ScheduleConfig):
+    return cfg.base_lr * _warmup(step, cfg)
+
+
+def linear(step, cfg: ScheduleConfig):
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    decay = 1.0 - (1.0 - cfg.min_lr_ratio) * t
+    return cfg.base_lr * _warmup(step, cfg) * decay
+
+
+def cosine(step, cfg: ScheduleConfig):
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    decay = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) \
+        * 0.5 * (1.0 + jnp.cos(math.pi * t))
+    return cfg.base_lr * _warmup(step, cfg) * decay
+
+
+def rsqrt(step, cfg: ScheduleConfig):
+    s = jnp.maximum(step.astype(jnp.float32), 1.0)
+    w = max(cfg.warmup_steps, 1)
+    return cfg.base_lr * _warmup(step, cfg) * jnp.sqrt(w / jnp.maximum(s, w))
+
+
+_SCHEDULES: dict[str, Callable] = {
+    "constant": constant,
+    "linear": linear,
+    "cosine": cosine,
+    "rsqrt": rsqrt,
+}
+
+
+def make_schedule(cfg: ScheduleConfig) -> Callable:
+    if cfg.name not in _SCHEDULES:
+        raise ValueError(f"unknown schedule {cfg.name!r}; "
+                         f"known: {sorted(_SCHEDULES)}")
+    fn = _SCHEDULES[cfg.name]
+    return lambda step: jnp.asarray(fn(jnp.asarray(step, jnp.float32), cfg),
+                                    jnp.float32)

@@ -1,0 +1,24 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device forcing here — smoke tests
+and benches must see the single real device (the dry-run sets its own)."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def assert_tree_allclose(a, b, rtol=1e-5, atol=1e-5):
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    assert ta == tb, (ta, tb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)

@@ -1,0 +1,125 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config,
+one forward + one train step on CPU, asserting output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, RunConfig, ShapeConfig, reduced_config
+from repro.models.lm import build_model
+from repro.train.trainer import make_train_step
+
+B, S = 2, 32
+
+
+def tiny_batch(cfg, batch=B, seq=S, dtype=jnp.float32):
+    t = jnp.arange(batch * seq, dtype=jnp.int32).reshape(batch, seq) \
+        % cfg.vocab_size
+    out = {"tokens": t}
+    if cfg.family == "vlm":
+        out["img_embeds"] = 0.01 * jnp.ones(
+            (batch, cfg.n_img_tokens, cfg.d_model), dtype)
+    if cfg.family == "audio":
+        out["frames"] = 0.01 * jnp.ones(
+            (batch, cfg.n_frames, cfg.d_model), dtype)
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_forward_shapes_no_nans(name, key):
+    cfg = reduced_config(ARCHS[name])
+    model = build_model(cfg)
+    params = model.init(key)
+    logits, aux, _ = model.forward(params, tiny_batch(cfg), "train")
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert jnp.isfinite(logits.astype(jnp.float32)).all()
+    loss, metrics = model.loss_fn(params, tiny_batch(cfg))
+    assert loss.shape == ()
+    assert jnp.isfinite(loss)
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_one_train_step(name, key):
+    cfg = reduced_config(ARCHS[name])
+    model = build_model(cfg)
+    shape = ShapeConfig(name="t", seq_len=S, global_batch=B, kind="train")
+    run = RunConfig(model=cfg, shape=shape, param_dtype="float32",
+                    compute_dtype="float32")
+    step, _, _, _, _, opt_init = make_train_step(model, run, rules=None)
+    params = model.init(key)
+    opt = opt_init(params)
+    p2, o2, metrics = jax.jit(step)(params, opt, tiny_batch(cfg))
+    assert jnp.isfinite(metrics["loss"])
+    assert jnp.isfinite(metrics["grad_norm"])
+    # params actually moved
+    moved = jax.tree.reduce(
+        lambda a, kv: a + float(jnp.abs(kv).sum()),
+        jax.tree.map(lambda a, b: (a - b).astype(jnp.float32), params, p2),
+        0.0)
+    assert moved > 0.0
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_grad_accumulation_matches_single_shot(name, key):
+    """microbatch=B/2 must give the same loss and (nearly) the same update."""
+    cfg = reduced_config(ARCHS[name])
+    if cfg.moe is not None:
+        pytest.skip("MoE routing depends on the token group -> not "
+                    "bitwise-comparable across microbatching")
+    model = build_model(cfg)
+    batch = tiny_batch(cfg, batch=4)
+    shape = ShapeConfig(name="t", seq_len=S, global_batch=4, kind="train")
+    run1 = RunConfig(model=cfg, shape=shape, param_dtype="float32",
+                     compute_dtype="float32")
+    run2 = RunConfig(model=cfg, shape=shape, microbatch=2,
+                     param_dtype="float32", compute_dtype="float32")
+    params = model.init(key)
+
+    outs = []
+    for run in (run1, run2):
+        step, *_, opt_init = make_train_step(model, run, rules=None)
+        p2, _, m = jax.jit(step)(params, opt_init(params), batch)
+        outs.append((p2, m))
+    (p_a, m_a), (p_b, m_b) = outs
+    assert abs(float(m_a["loss"]) - float(m_b["loss"])) < 2e-3
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), p_a, p_b)
+    assert max(jax.tree.leaves(diffs)) < 5e-2      # adam normalizes scale
+
+
+@pytest.mark.parametrize("name", ["qwen1.5-32b", "mamba2-1.3b",
+                                  "zamba2-1.2b", "whisper-large-v3",
+                                  "grok-1-314b", "paligemma-3b"])
+def test_prefill_decode_consistency(name, key):
+    """Greedy decode token-by-token must match teacher-forced logits."""
+    cfg = reduced_config(ARCHS[name])
+    model = build_model(cfg, attn_impl="naive")
+    params = model.init(key)
+    batch = tiny_batch(cfg, batch=1, seq=8)
+
+    # teacher-forced full forward
+    full_logits, _, _ = model.forward(params, batch, "train")
+
+    # prefill on the first 4 tokens, then decode 4
+    pre = {k: (v[:, :4] if k == "tokens" else v) for k, v in batch.items()}
+    logits, cache = model.prefill_fn(params, pre)
+
+    # grow the *self-attention* KV seq axis (axis 2 of (L,B,S,KV,HD) leaves;
+    # cross-attn xk/xv and SSM state are fixed-size) from 4 to 8
+    def grow(x):
+        pad = [(0, 0)] * x.ndim
+        pad[2] = (0, 4)
+        return jnp.pad(x, pad)
+
+    if isinstance(cache, dict):
+        for kname in ("k", "v", "shared_k", "shared_v"):
+            if kname in cache:
+                cache[kname] = grow(cache[kname])
+
+    errs = [float(jnp.max(jnp.abs(logits - full_logits[:, 3])))]
+    for pos in range(4, 8):
+        tok = batch["tokens"][:, pos:pos + 1]
+        logits, cache = model.decode_fn(
+            params, cache, {"tokens": tok, "pos": jnp.asarray(pos, jnp.int32)})
+        if pos < 7:
+            errs.append(float(jnp.max(jnp.abs(logits - full_logits[:, pos]))))
+    assert max(errs) < 2e-2, errs
