@@ -23,6 +23,7 @@ import sys
 from pathlib import Path
 
 import jax
+from jax.experimental import enable_x64 as jax_enable_x64
 
 from repro.configs.a64fx_kernelsuite import (
     KERNELS, PAPER_MEAN_ABS_DIFF_PCT, PAPER_MEAN_DIFF_PCT,
@@ -37,7 +38,7 @@ OUT = Path("experiments/bench")
 def a64fx_cycles_per_8elem(kernel_name: str, n: int) -> float:
     """Simulated single-core A64FX cycles per 8-element operation."""
     from repro.configs.a64fx_kernelsuite import KERNELS_BY_NAME
-    with jax.enable_x64(True):
+    with jax_enable_x64():
         x1, x2, y0 = calibrate._kernel_inputs(KERNELS_BY_NAME[kernel_name], n)
         f = calibrate._jit_kernel(kernel_name)
         compiled = f.lower(x1, x2, y0).compile()
@@ -51,6 +52,10 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true",
                     help="subset of kernels, fewer repeats")
     ap.add_argument("--size-scale", type=int, default=calibrate.SIZE_SCALE)
+    ap.add_argument("--sweep-o3", action="store_true",
+                    help="grid-sweep the O3 schedule knobs (window / mem "
+                         "issue width / queue depth) against the measured "
+                         "kernels and report the tuned parameter file")
     args = ap.parse_args(argv)
 
     kernels = KERNELS[::4] if args.quick else KERNELS
@@ -65,10 +70,22 @@ def main(argv=None) -> int:
     print(f"  opcode factors: "
           f"{ {k: round(v, 1) for k, v in sorted(hw.opcode_factor.items())} }")
 
-    print("\n== accuracy vs the host 'test chip' (Fig. 3 orange dots) ==")
+    print("\n== accuracy vs the host 'test chip' (Fig. 3 orange dots; "
+          "occupancy vs schedule engine) ==")
     table = calibrate.kernel_accuracy_table(hw, size_scale=args.size_scale,
-                                            kernels=kernels)
+                                            kernels=kernels,
+                                            keep_programs=args.sweep_o3)
     print(table.report())
+
+    sweep = None
+    if args.sweep_o3:
+        print("\n== O3 resource-knob sweep (paper §4: OoO parameter "
+              "tuning, fitted against the test chip) ==")
+        sweep = calibrate.sweep_o3(table, hw)
+        print(sweep.report())
+        b = sweep.results[0]
+        print(f"  tuned: window={b['inflight_window']} "
+              f"mem_width={b['mem_issue_width']} qdepth={b['queue_depth']}")
 
     print("\n== simulated A64FX single-core throughput "
           "(Fig. 3 bars; cycles / 8-element op) ==")
@@ -83,12 +100,17 @@ def main(argv=None) -> int:
         "rows": [{"name": r.name, "type": r.ktype, "n": r.n,
                   "measured_us": r.measured_us,
                   "simulated_us": r.simulated_us,
-                  "diff_pct": r.diff_pct} for r in table.rows],
+                  "diff_pct": r.diff_pct,
+                  "simulated_sched_us": r.simulated_sched_us,
+                  "sched_diff_pct": r.sched_diff_pct} for r in table.rows],
+        "o3_sweep": sweep.results if sweep is not None else None,
         "summary": {
             "mean_diff_pct": table.mean_diff,
             "std_diff_pct": table.std_diff,
             "mean_abs_diff_pct": table.mean_abs_diff,
             "within_10pct": table.within_10pct,
+            "sched_mean_abs_diff_pct": table.sched_mean_abs_diff,
+            "sched_within_10pct": table.sched_within_10pct,
             "paper": {
                 "mean_diff_pct": PAPER_MEAN_DIFF_PCT,
                 "std_diff_pct": PAPER_STD_DIFF_PCT,

@@ -27,11 +27,15 @@ from typing import Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+# jax.enable_x64 left the top-level namespace in jax 0.4.31+
+from jax.experimental import enable_x64 as jax_enable_x64
 
 from ..configs.a64fx_kernelsuite import KERNELS, Kernel
 from ..kernels import ref as kref
 from ..kernels.stream import EXPRS, _DTYPES
+from .hlo import Program
 from .hwspec import CPU_HOST, HardwareSpec
+from .schedule import schedule_program
 from .simulate import SimReport, simulate
 
 SIZE_SCALE = 1024     # paper: iter/1000; here: n x1024 (see module docstring)
@@ -113,7 +117,7 @@ def fit_cpu_host(n_mem: int = 1 << 21, n_fac: int = 1 << 15) -> HardwareSpec:
       paper's per-OpClass latency table, de-masked from bandwidth).
     """
     by_name = {k.name: k for k in KERNELS}
-    with jax.enable_x64(True):
+    with jax_enable_x64():
         startup = measure_dispatch_overhead()
 
         def t_kernel(name: str, n: int, repeats: int = 15) -> float:
@@ -173,18 +177,27 @@ class KernelRow:
     ktype: str
     n: int
     measured_us: float
-    simulated_us: float
+    simulated_us: float          # flat occupancy engine
     fit_input: bool = False      # this kernel informed the parameter fit
+    simulated_sched_us: float = 0.0   # dependency-aware schedule engine
 
     @property
     def diff_pct(self) -> float:
         """Positive = simulator slower than test chip (paper convention)."""
         return 100.0 * (self.simulated_us - self.measured_us) / self.measured_us
 
+    @property
+    def sched_diff_pct(self) -> float:
+        return 100.0 * (self.simulated_sched_us - self.measured_us) \
+            / self.measured_us
+
 
 @dataclass
 class AccuracyTable:
     rows: List[KernelRow]
+    # parsed per-kernel programs, aligned with rows (kept when
+    # keep_programs=True so sweep_o3 can re-schedule without re-measuring)
+    programs: List[Program] = dataclasses.field(default_factory=list)
 
     @property
     def mean_diff(self) -> float:
@@ -202,18 +215,34 @@ class AccuracyTable:
     def within_10pct(self) -> float:
         return sum(abs(r.diff_pct) <= 10.0 for r in self.rows) / len(self.rows)
 
+    @property
+    def sched_mean_abs_diff(self) -> float:
+        return statistics.mean(abs(r.sched_diff_pct) for r in self.rows)
+
+    @property
+    def sched_within_10pct(self) -> float:
+        return sum(abs(r.sched_diff_pct) <= 10.0
+                   for r in self.rows) / len(self.rows)
+
     def report(self) -> str:
         lines = [f"{'kernel':<8s}{'type':<10s}{'n':>9s}{'measured_us':>13s}"
-                 f"{'simulated_us':>14s}{'diff%':>8s}  fit?"]
+                 f"{'occup_us':>10s}{'diff%':>8s}{'sched_us':>10s}"
+                 f"{'diff%':>8s}  fit?"]
         for r in self.rows:
             lines.append(f"{r.name:<8s}{r.ktype:<10s}{r.n:>9d}"
-                         f"{r.measured_us:>13.2f}{r.simulated_us:>14.2f}"
-                         f"{r.diff_pct:>8.1f}  {'*' if r.fit_input else ''}")
+                         f"{r.measured_us:>13.2f}{r.simulated_us:>10.2f}"
+                         f"{r.diff_pct:>8.1f}{r.simulated_sched_us:>10.2f}"
+                         f"{r.sched_diff_pct:>8.1f}"
+                         f"  {'*' if r.fit_input else ''}")
         lines.append(
-            f"-- all 28:  mean {self.mean_diff:+.1f}%  std "
-            f"{self.std_diff:.1f}%  mean|.| {self.mean_abs_diff:.1f}%  "
+            f"-- all {len(self.rows)} (occupancy):  mean {self.mean_diff:+.1f}%"
+            f"  std {self.std_diff:.1f}%  mean|.| {self.mean_abs_diff:.1f}%  "
             f"within+-10%: {100 * self.within_10pct:.0f}%  "
             f"(paper: +1.3%, 7.8%, 6.6%, 82%)")
+        lines.append(
+            f"-- all {len(self.rows)} (schedule):   "
+            f"mean|.| {self.sched_mean_abs_diff:.1f}%  "
+            f"within+-10%: {100 * self.sched_within_10pct:.0f}%")
         held = [r for r in self.rows if not r.fit_input]
         if held and len(held) < len(self.rows):
             ho = AccuracyTable(held)
@@ -228,19 +257,90 @@ class AccuracyTable:
 
 def kernel_accuracy_table(hw: Optional[HardwareSpec] = None,
                           size_scale: int = SIZE_SCALE,
-                          kernels: Optional[List[Kernel]] = None
-                          ) -> AccuracyTable:
+                          kernels: Optional[List[Kernel]] = None,
+                          keep_programs: bool = False) -> AccuracyTable:
     hw = hw or fit_cpu_host()
     rows: List[KernelRow] = []
-    with jax.enable_x64(True):
+    programs: List[Program] = []
+    with jax_enable_x64():
         for k in (kernels or KERNELS):
             n = k.n * size_scale
             x1, x2, y0 = _kernel_inputs(k, n)
             f = _jit_kernel(k.name)
             t = _median_time(f, (x1, x2, y0))
             compiled = f.lower(x1, x2, y0).compile()
-            rep = simulate(compiled, hw=hw, n_chips=1, compute_dtype="f64")
+            rep = simulate(compiled, hw=hw, n_chips=1, compute_dtype="f64",
+                           engine="both")
             rows.append(KernelRow(k.name, k.ktype, n, t * 1e6,
                                   rep.engine.t_est * 1e6,
-                                  fit_input=k.name in _FACTOR_FIT))
-    return AccuracyTable(rows)
+                                  fit_input=k.name in _FACTOR_FIT,
+                                  simulated_sched_us=rep.schedule.t_est * 1e6))
+            if keep_programs:
+                programs.append(rep.program)
+    return AccuracyTable(rows, programs=programs)
+
+
+# ------------------------------------------------------- O3 parameter sweep
+# Sweep grid for the schedule engine's resource knobs — the paper's
+# "detailed parameter tuning of out-of-order resources" (§4), fitted
+# against the test chip instead of taken from Fujitsu's NDA tables.
+O3_WINDOWS = (4, 16, 64, 256)
+O3_MEM_WIDTHS = (1, 2, 4)
+O3_QUEUE_DEPTHS = (4, 16, 64)
+
+
+def sweep_o3(table: AccuracyTable, hw: HardwareSpec,
+             windows=O3_WINDOWS, mem_widths=O3_MEM_WIDTHS,
+             queue_depths=O3_QUEUE_DEPTHS,
+             compute_dtype: str = "f64") -> "O3Sweep":
+    """Re-schedule already-measured programs under each knob combination
+    (pure python — no re-measurement, no recompilation) and rank combos by
+    mean |diff| of the schedule engine vs the measured wall times.
+
+    Requires a table built with ``keep_programs=True``."""
+    if not table.programs:
+        raise ValueError("sweep_o3 needs kernel_accuracy_table("
+                         "keep_programs=True)")
+    results: List[Dict] = []
+    for w in windows:
+        for mw in mem_widths:
+            for qd in queue_depths:
+                cand = hw.with_(
+                    inflight_window=w,
+                    issue_width={**hw.issue_width, "mem": mw},
+                    queue_depth={p: qd for p in ("mxu", "vpu", "mem", "ici")})
+                diffs = []
+                for prog, row in zip(table.programs, table.rows):
+                    t = schedule_program(prog, cand,
+                                         compute_dtype=compute_dtype).t_est
+                    diffs.append(abs(t * 1e6 - row.measured_us)
+                                 / row.measured_us * 100.0)
+                results.append({"inflight_window": w, "mem_issue_width": mw,
+                                "queue_depth": qd,
+                                "mean_abs_diff_pct": statistics.mean(diffs),
+                                "within_10pct": sum(d <= 10.0 for d in diffs)
+                                / len(diffs)})
+    results.sort(key=lambda r: r["mean_abs_diff_pct"])
+    best = results[0]
+    tuned = hw.with_(
+        inflight_window=best["inflight_window"],
+        issue_width={**hw.issue_width, "mem": best["mem_issue_width"]},
+        queue_depth={p: best["queue_depth"]
+                     for p in ("mxu", "vpu", "mem", "ici")})
+    return O3Sweep(results=results, best=tuned)
+
+
+@dataclass
+class O3Sweep:
+    results: List[Dict]          # ranked best-first
+    best: HardwareSpec           # hw with the winning O3 knobs applied
+
+    def report(self, top: int = 8) -> str:
+        lines = [f"{'window':>7s}{'mem_w':>7s}{'qdepth':>7s}"
+                 f"{'mean|.|%':>10s}{'<=10%':>7s}"]
+        for r in self.results[:top]:
+            lines.append(f"{r['inflight_window']:>7d}"
+                         f"{r['mem_issue_width']:>7d}{r['queue_depth']:>7d}"
+                         f"{r['mean_abs_diff_pct']:>10.1f}"
+                         f"{100 * r['within_10pct']:>6.0f}%")
+        return "\n".join(lines)

@@ -33,6 +33,8 @@ class OpTime:
     t_mem: float
     t_ici: float
     port: str
+    useful_flops: float = 0.0     # matmul lane accounting (MXU utilization)
+    padded_flops: float = 0.0
 
     @property
     def t_op(self) -> float:
@@ -74,6 +76,88 @@ def collective_factor(kind: str, g: int) -> float:
     return 1.0
 
 
+def cost_op(o: OpStat, hw: HardwareSpec, ici_bw: float,
+            compute_dtype: Optional[str] = None) -> Optional[OpTime]:
+    """Per-op port assignment + per-instance times — shared by the flat
+    occupancy engine below and by ``core.schedule``'s dependency-aware
+    engine.  Returns None for ops the cost model does not charge."""
+    denorm = compute_dtype in ("bf16", "f16")
+
+    def eff_dtype() -> str:
+        if denorm and o.dtype == "f32":
+            return compute_dtype
+        return o.dtype
+
+    def eff_bytes() -> float:
+        if denorm and o.dtype == "f32":
+            return 0.5 * o.bytes_accessed
+        return o.bytes_accessed
+
+    def mem_bw(nbytes: float) -> float:
+        if hw.cache_model and nbytes <= hw.vmem_bytes:
+            return hw.vmem_bw
+        return hw.hbm_read_bw
+
+    def trans_time() -> float:
+        """Per-opcode latency table (paper's OpClass extension)."""
+        if not o.trans_by_opcode:
+            return o.transcendentals * hw.transcendental_factor
+        return sum(v * hw.opcode_factor.get(k, hw.transcendental_factor)
+                   for k, v in o.trans_by_opcode.items())
+
+    t_c = t_m = t_i = 0.0
+    useful = padded_f = 0.0
+    port = "vpu"
+    if o.opclass == "matmul":
+        port = "mxu"
+        util = 1.0
+        if o.dot_dims:
+            m, n, k = o.dot_dims
+            if min(m, n, k) < hw.min_matmul_dim_for_mxu:
+                # tiny contraction/row dims: XLA emits a VPU multiply-
+                # reduce, NOT an MXU matmul — no 128-tile quantization
+                # (8-lane sublane padding only).
+                port = "vpu"
+                util = m * n * k / (max(m, 8 * math.ceil(m / 8), 1)
+                                    * n * k) if m else 1.0
+            else:
+                tm, tk, tn = hw.mxu_tile
+                pm = math.ceil(m / tm) * tm
+                pk = math.ceil(k / tk) * tk
+                pn = math.ceil(n / tn) * tn
+                util = (m * n * k) / max(pm * pn * pk, 1)
+        padded = o.flops / max(util, 1e-9)
+        useful = o.flops * o.count
+        padded_f = padded * o.count
+        peak = (hw.matmul_flops(eff_dtype()) if port == "mxu"
+                else hw.vector_flops(eff_dtype()))
+        t_c = padded / peak
+        t_m = eff_bytes() / mem_bw(eff_bytes())
+    elif o.opclass in ("elementwise", "reduce"):
+        base = o.flops - o.transcendentals
+        t_c = (base + trans_time()) / hw.vector_flops(eff_dtype())
+        t_m = eff_bytes() / mem_bw(eff_bytes())
+    elif o.opclass == "transcendental":
+        t_c = trans_time() / hw.vector_flops(eff_dtype())
+        t_m = eff_bytes() / mem_bw(eff_bytes())
+    elif o.opclass == "data":
+        t_m = eff_bytes() / mem_bw(eff_bytes())
+        port = "mem"
+    elif o.opclass == "collective":
+        f = collective_factor(o.opcode, o.group_size)
+        payload = (0.5 * o.comm_bytes
+                   if denorm and o.dtype == "f32" else o.comm_bytes)
+        t_i = f * payload / ici_bw + hw.collective_startup_us * 1e-6
+        port = "ici"
+    else:
+        return None
+
+    # OpClass throughput overrides (the paper's operand-type table)
+    t_c *= hw.opclass_throughput.get(o.opclass, 1.0)
+    return OpTime(o, t_c, t_m, t_i, port,
+                  useful_flops=useful, padded_flops=padded_f)
+
+
 def simulate_program(prog: Program, hw: HardwareSpec,
                      links_per_collective: int = 2,
                      compute_dtype: Optional[str] = None) -> EngineResult:
@@ -85,7 +169,7 @@ def simulate_program(prog: Program, hw: HardwareSpec,
     bf16) — the paper's operand-type-dependent OpClass table, applied in
     reverse.  f32-by-design state (optimizer moments, the loss) is also
     halved; it is step-frequency (not layer x microbatch frequency) traffic,
-    so the error is bounded and documented in DESIGN.md."""
+    so the error is bounded and documented in DESIGN.md §7."""
     port_busy: Dict[str, float] = defaultdict(float)
     by_class: Dict[str, float] = defaultdict(float)
     coll_kind: Dict[str, float] = defaultdict(float)
@@ -96,81 +180,16 @@ def simulate_program(prog: Program, hw: HardwareSpec,
     useful_f, padded_f = 0.0, 0.0
 
     ici_bw = links_per_collective * hw.ici_bw_per_link
-    denorm = compute_dtype in ("bf16", "f16")
-
-    def eff_dtype(o: OpStat) -> str:
-        if denorm and o.dtype == "f32":
-            return compute_dtype
-        return o.dtype
-
-    def eff_bytes(o: OpStat) -> float:
-        if denorm and o.dtype == "f32":
-            return 0.5 * o.bytes_accessed
-        return o.bytes_accessed
-
-    def mem_bw(nbytes: float) -> float:
-        if hw.cache_model and nbytes <= hw.vmem_bytes:
-            return hw.vmem_bw
-        return hw.hbm_read_bw
-
-    def trans_time(o: OpStat) -> float:
-        """Per-opcode latency table (paper's OpClass extension)."""
-        if not o.trans_by_opcode:
-            return o.transcendentals * hw.transcendental_factor
-        return sum(v * hw.opcode_factor.get(k, hw.transcendental_factor)
-                   for k, v in o.trans_by_opcode.items())
 
     for o in prog.ops:
-        t_c = t_m = t_i = 0.0
-        port = "vpu"
-        if o.opclass == "matmul":
-            port = "mxu"
-            util = 1.0
-            if o.dot_dims:
-                m, n, k = o.dot_dims
-                if min(m, n, k) < hw.min_matmul_dim_for_mxu:
-                    # tiny contraction/row dims: XLA emits a VPU multiply-
-                    # reduce, NOT an MXU matmul — no 128-tile quantization
-                    # (8-lane sublane padding only).
-                    port = "vpu"
-                    util = m * n * k / (max(m, 8 * math.ceil(m / 8), 1)
-                                        * n * k) if m else 1.0
-                else:
-                    tm, tk, tn = hw.mxu_tile
-                    pm = math.ceil(m / tm) * tm
-                    pk = math.ceil(k / tk) * tk
-                    pn = math.ceil(n / tn) * tn
-                    util = (m * n * k) / max(pm * pn * pk, 1)
-            padded = o.flops / max(util, 1e-9)
-            useful_f += o.flops * o.count
-            padded_f += padded * o.count
-            peak = (hw.matmul_flops(eff_dtype(o)) if port == "mxu"
-                    else hw.vector_flops(eff_dtype(o)))
-            t_c = padded / peak
-            t_m = eff_bytes(o) / mem_bw(eff_bytes(o))
-        elif o.opclass in ("elementwise", "reduce"):
-            base = o.flops - o.transcendentals
-            t_c = (base + trans_time(o)) / hw.vector_flops(eff_dtype(o))
-            t_m = eff_bytes(o) / mem_bw(eff_bytes(o))
-        elif o.opclass == "transcendental":
-            t_c = trans_time(o) / hw.vector_flops(eff_dtype(o))
-            t_m = eff_bytes(o) / mem_bw(eff_bytes(o))
-        elif o.opclass == "data":
-            t_m = eff_bytes(o) / mem_bw(eff_bytes(o))
-            port = "mem"
-        elif o.opclass == "collective":
-            f = collective_factor(o.opcode, o.group_size)
-            payload = (0.5 * o.comm_bytes
-                       if denorm and o.dtype == "f32" else o.comm_bytes)
-            t_i = f * payload / ici_bw + hw.collective_startup_us * 1e-6
-            port = "ici"
-            coll_kind[o.opcode] += t_i * o.count
-        else:
+        ot = cost_op(o, hw, ici_bw, compute_dtype)
+        if ot is None:
             continue
-
-        # OpClass throughput overrides (the paper's operand-type table)
-        scale = hw.opclass_throughput.get(o.opclass, 1.0)
-        t_c *= scale
+        t_c, t_m, t_i, port = ot.t_compute, ot.t_mem, ot.t_ici, ot.port
+        useful_f += ot.useful_flops
+        padded_f += ot.padded_flops
+        if o.opclass == "collective":
+            coll_kind[o.opcode] += t_i * o.count
 
         if port in ("mxu", "vpu"):
             port_busy[port] += t_c * o.count
@@ -180,7 +199,7 @@ def simulate_program(prog: Program, hw: HardwareSpec,
         t_serial += max(t_c, t_m, t_i) * o.count
         startup += hw.op_startup_ns * 1e-9 * o.count
         n_ops += o.count
-        op_times.append(OpTime(o, t_c, t_m, t_i, port))
+        op_times.append(ot)
 
     compute = port_busy["mxu"] + port_busy["vpu"]
     mem_exposed = max(0.0, port_busy["mem"] - hw.dma_overlap * compute)

@@ -113,6 +113,11 @@ class OpStat:
     # transcendental element counts by HLO opcode (survives fusion), so the
     # engine can apply the paper-style per-opcode latency table
     trans_by_opcode: Dict[str, float] = field(default_factory=dict)
+    # def-use edges: indices into Program.ops of the producers this op
+    # consumes (resolved through free/pass-through ops and computation
+    # boundaries).  The schedule engine turns these into issue constraints;
+    # the occupancy engine ignores them.
+    deps: List[int] = field(default_factory=list)
 
 
 @dataclass
@@ -278,7 +283,16 @@ def _parse_rhs(rhs: str):
         # strip /*index=N*/ positional comments (emitted for >5 operands) —
         # losing an operand here shifts every later parameter index.
         a = re.sub(r"/\*.*?\*/", "", a).strip()
-        am = re.match(r"%?([\w.\-]+)", a)
+        # compiled modules annotate operands with their full (layout-bearing)
+        # type: ``copy(f32[32,32]{1,0:T(8,128)} %Arg_0.1)``.  The name is the
+        # %-sigiled token; fall back to the last whitespace token for sigil-
+        # free dumps (and bare constant literals like ``constant(0)``).
+        toks = re.findall(r"%([\w.\-]+)", a)
+        if toks:
+            operands.append(toks[-1])
+            continue
+        parts = a.split()
+        am = re.match(r"%?([\w.\-]+)", parts[-1] if parts else a)
         if am:
             operands.append(am.group(1))
     return type_str, opcode, operands, attrs
@@ -532,10 +546,70 @@ def _consumers(comp: Computation) -> Dict[str, List[str]]:
     return cons
 
 
+def _group_sinks(out: List[OpStat], start: int) -> List[int]:
+    """Indices in out[start:] not consumed by another op of the same group —
+    the group's dataflow outputs (what a downstream consumer waits on)."""
+    group = range(start, len(out))
+    if not group:
+        return []
+    referenced = set()
+    for i in group:
+        referenced.update(d for d in out[i].deps if d >= start)
+    sinks = [i for i in group if i not in referenced]
+    return sinks or list(group)
+
+
+def _callee_param_deps(callee: Computation,
+                       operand_deps: List[List[int]]) -> Dict[str, List[int]]:
+    """Map callee parameter instr names to the call-site operands' producer
+    indices (positionally, via the parameter(N) index)."""
+    pd: Dict[str, List[int]] = {}
+    for nm, ci in callee.instrs.items():
+        if ci.opcode == "parameter" and ci.operands:
+            try:
+                k = int(ci.operands[0])
+            except ValueError:
+                continue
+            if k < len(operand_deps):
+                pd[nm] = operand_deps[k]
+    return pd
+
+
 def _cost_computation(comp: Computation, comps: Dict[str, Computation],
                       npart: int, mult: float, out: List[OpStat],
-                      inline_fusions: bool):
+                      inline_fusions: bool,
+                      param_deps: Optional[Dict[str, List[int]]] = None):
     consumers = _consumers(comp)
+    param_deps = param_deps or {}
+    # instr name -> indices into ``out`` that produce it (def-use edges)
+    producer: Dict[str, List[int]] = {}
+    resolved: Dict[str, List[int]] = {}
+
+    def _resolve(nm: str) -> List[int]:
+        if nm in producer:
+            return producer[nm]
+        if nm in resolved:
+            return resolved[nm]
+        if nm in param_deps:
+            resolved[nm] = param_deps[nm]
+            return resolved[nm]
+        got: List[int] = []
+        ci = comp.instrs.get(nm)
+        if ci is not None:
+            resolved[nm] = []            # guard (HLO is SSA; belt & braces)
+            s: set = set()
+            for o2 in ci.operands:
+                s.update(_resolve(o2))
+            got = sorted(s)
+        resolved[nm] = got
+        return got
+
+    def _union_deps(names: List[str]) -> List[int]:
+        s: set = set()
+        for o2 in names:
+            s.update(_resolve(o2))
+        return sorted(s)
+
     for name in comp.order:
         instr = comp.instrs[name]
         opcode = instr.opcode
@@ -564,7 +638,9 @@ def _cost_computation(comp: Computation, comps: Dict[str, Computation],
                               "matmul" if dot_dims else "elementwise",
                               instr.dtype, flops=flops, transcendentals=trans,
                               bytes_accessed=boundary, count=mult,
-                              dot_dims=dot_dims, trans_by_opcode=dict(tbo)))
+                              dot_dims=dot_dims, trans_by_opcode=dict(tbo),
+                              deps=_union_deps(instr.operands)))
+            producer[name] = [len(out) - 1]
             continue
         if opcode in ("while",):
             body = None
@@ -579,17 +655,34 @@ def _cost_computation(comp: Computation, comps: Dict[str, Computation],
             if cond and cond in comps:
                 trips = _while_trip_count(comps[cond], comps)
             if body and body in comps:
+                start = len(out)
+                odeps = [_resolve(o2) for o2 in instr.operands]
                 _cost_computation(comps[body], comps, npart, mult * trips, out,
-                                  inline_fusions)
+                                  inline_fusions,
+                                  param_deps=_callee_param_deps(comps[body],
+                                                                odeps))
+                producer[name] = (_group_sinks(out, start)
+                                  or _union_deps(instr.operands))
+            else:
+                producer[name] = _union_deps(instr.operands)
             continue
         if opcode in ("call", "async-start"):
             callee = _called(instr.attrs)
             if callee and callee in comps:
+                start = len(out)
+                odeps = [_resolve(o2) for o2 in instr.operands]
                 _cost_computation(comps[callee], comps, npart, mult, out,
-                                  inline_fusions)
+                                  inline_fusions,
+                                  param_deps=_callee_param_deps(comps[callee],
+                                                                odeps))
+                producer[name] = (_group_sinks(out, start)
+                                  or _union_deps(instr.operands))
+            else:
+                producer[name] = _union_deps(instr.operands)
             continue
         if opcode == "conditional":
-            # cost the most expensive branch
+            # cost the most expensive branch (throwaway flops-only pass to
+            # pick it, then re-cost into ``out`` so dep indices are global)
             branches = re.findall(r"branch_computations=\{([^}]*)\}", instr.attrs)
             names = []
             if branches:
@@ -598,17 +691,32 @@ def _cost_computation(comp: Computation, comps: Dict[str, Computation],
                 names = [x for x in
                          re.findall(r"(?:true|false)_computation=%?([\w.\-]+)",
                                     instr.attrs)]
-            best: List[OpStat] = []
+            best_nm: Optional[str] = None
+            best_j = -1
             best_f = -1.0
-            for nm in names:
+            for j, nm in enumerate(names):
                 if nm in comps:
                     cand: List[OpStat] = []
                     _cost_computation(comps[nm], comps, npart, mult, cand,
                                       inline_fusions)
                     f = sum(o.flops * o.count for o in cand)
                     if f > best_f:
-                        best, best_f = cand, f
-            out.extend(best)
+                        best_nm, best_j, best_f = nm, j, f
+            if best_nm is not None:
+                start = len(out)
+                # branch k consumes conditional operand k+1 (0 is the pred)
+                if best_j + 1 < len(instr.operands):
+                    odeps = [_resolve(instr.operands[best_j + 1])]
+                else:
+                    odeps = [_union_deps(instr.operands)]
+                _cost_computation(comps[best_nm], comps, npart, mult, out,
+                                  inline_fusions,
+                                  param_deps=_callee_param_deps(comps[best_nm],
+                                                                odeps))
+                producer[name] = (_group_sinks(out, start)
+                                  or _union_deps(instr.operands))
+            else:
+                producer[name] = _union_deps(instr.operands)
             continue
 
         in_b = _operand_bytes(instr, comp)
@@ -634,7 +742,8 @@ def _cost_computation(comp: Computation, comps: Dict[str, Computation],
                             for c in cons if c in comp.instrs):
                 out_b = 0.0
         stat = OpStat(name, opcode, cls, instr.dtype,
-                      bytes_accessed=in_b + out_b, count=mult)
+                      bytes_accessed=in_b + out_b, count=mult,
+                      deps=_union_deps(instr.operands))
         nelems = max(1, math.prod(instr.shape))
         if cls == "matmul":
             if opcode == "dot":
@@ -654,6 +763,7 @@ def _cost_computation(comp: Computation, comps: Dict[str, Computation],
             stat.group_size = _group_size(instr.attrs, npart)
             stat.opcode = COLLECTIVES[opcode]
         out.append(stat)
+        producer[name] = [len(out) - 1]
 
 
 def parse_program(text: str) -> Program:

@@ -44,6 +44,19 @@ class HardwareSpec:
     serialization: float = 0.10         # residual dependency serialization
     op_startup_ns: float = 2_000.0      # per-HLO-op launch/pipeline-fill cost
     collective_startup_us: float = 10.0 # per-collective latency
+    # ---- O3 scheduling resources (core.schedule; the gem5 ROB / issue /
+    # reservation-station analogue).  The occupancy engine ignores these.
+    #   issue_width[port]: parallel pipes per port (async DMA engines, dual
+    #                      VPU issue, per-direction ICI injection).
+    #   inflight_window:   ROB size — op i cannot issue until op i-window
+    #                      has retired (in-order retirement).
+    #   queue_depth[port]: reservation-station depth — op i cannot issue
+    #                      until the op `depth` earlier on its port issued.
+    issue_width: Dict[str, int] = field(
+        default_factory=lambda: {"mxu": 1, "vpu": 1, "mem": 2, "ici": 1})
+    inflight_window: int = 64
+    queue_depth: Dict[str, int] = field(
+        default_factory=lambda: {"mxu": 16, "vpu": 16, "mem": 16, "ici": 8})
     # ---- OpClass overrides (paper's operand-type-dependent latency table)
     opclass_throughput: Dict[str, float] = field(default_factory=dict)
     # per-HLO-opcode slowdown factors vs plain vector ops (paper: per-OpClass

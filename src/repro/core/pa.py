@@ -18,6 +18,7 @@ from typing import Dict, List, Optional
 from .engine import EngineResult
 from .hlo import Program
 from .roofline import Roofline
+from .schedule import ScheduleResult
 
 
 def _fmt_t(s: float) -> str:
@@ -69,12 +70,58 @@ def suggestions(rf: Roofline, eng: EngineResult, prog: Program) -> List[str]:
     return out
 
 
+def _schedule_section(sched: ScheduleResult) -> List[str]:
+    """Critical-path + per-port timeline view of the O3 schedule — the
+    paper's cycle-by-cycle OoO resource utilization, at HLO altitude."""
+    lines = []
+    mk = max(sched.t_est, 1e-30)
+    lines.append("  schedule engine (dependency-aware O3):")
+    lines.append(f"    estimate: {_fmt_t(sched.t_est)}   dataflow critical "
+                 f"path: {_fmt_t(sched.t_dataflow)}   serial: "
+                 f"{_fmt_t(sched.t_serial)}")
+    lines.append(f"    overlap from schedule: {100 * sched.overlap_fraction:.1f}%"
+                 f" of serial hidden   ({sched.n_edges} def-use edges)")
+    lines.append("    port timeline (busy | util of makespan):")
+    for port in ("mxu", "vpu", "mem", "ici"):
+        if port not in sched.port_busy:
+            continue
+        busy = sched.port_busy[port]
+        lines.append(f"      {port:<4s} {_fmt_t(busy)}  "
+                     f"({100 * busy / mk:5.1f}%)")
+    if sched.stall_by_reason:
+        stalls = "  ".join(f"{k}:{_fmt_t(v).strip()}"
+                           for k, v in sorted(sched.stall_by_reason.items(),
+                                              key=lambda kv: -kv[1]))
+        lines.append(f"    issue stalls beyond data-ready: {stalls}")
+    cp = sched.critical_path
+    if cp:
+        covered = sum(c.duration for c in cp)
+        lines.append(f"    critical path ({len(cp)} ops, "
+                     f"{100 * covered / mk:.0f}% of makespan):")
+        for c in cp[-12:]:
+            lines.append(f"      {c.op.name[:40]:<40s} {c.port:<4s} "
+                         f"start {_fmt_t(c.start)}  dur "
+                         f"{_fmt_t(c.duration)}  <- {c.bound_by}")
+    return lines
+
+
 def pa_report(rf: Roofline, eng: EngineResult, prog: Program,
-              title: str = "") -> str:
+              title: str = "", sched: Optional[ScheduleResult] = None,
+              engine_mode: str = "occupancy") -> str:
     lines = []
     lines.append(f"== PA report {title} ==")
-    lines.append(f"  estimate: {_fmt_t(eng.t_est)}   roofline-bound: "
-                 f"{_fmt_t(eng.t_roofline)}   serial: {_fmt_t(eng.t_serial)}")
+    # headline matches SimReport.t_est: schedule-derived in schedule mode,
+    # occupancy otherwise (labelled when both numbers are in the report)
+    if engine_mode == "schedule" and sched is not None:
+        lines.append(f"  estimate (schedule): {_fmt_t(sched.t_est)}   "
+                     f"occupancy: {_fmt_t(eng.t_est)}   roofline-bound: "
+                     f"{_fmt_t(eng.t_roofline)}   serial: "
+                     f"{_fmt_t(eng.t_serial)}")
+    else:
+        label = "estimate (occupancy)" if sched is not None else "estimate"
+        lines.append(f"  {label}: {_fmt_t(eng.t_est)}   roofline-bound: "
+                     f"{_fmt_t(eng.t_roofline)}   serial: "
+                     f"{_fmt_t(eng.t_serial)}")
     lines.append(f"  roofline terms: compute {_fmt_t(rf.compute_s)} | memory "
                  f"{_fmt_t(rf.memory_s)} | collective {_fmt_t(rf.collective_s)}"
                  f"  -> dominant: {rf.dominant}")
@@ -95,6 +142,8 @@ def pa_report(rf: Roofline, eng: EngineResult, prog: Program,
                            key=lambda kv: -kv[1]):
             lines.append(f"    {k:<20s} {_fmt_t(t)}  payload/dev "
                          f"{comm.get(k, 0) / 2**20:9.1f} MiB")
+    if sched is not None:
+        lines.extend(_schedule_section(sched))
     lines.append("  hints:")
     for s in suggestions(rf, eng, prog):
         lines.append(f"    - {s}")

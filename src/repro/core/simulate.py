@@ -21,6 +21,7 @@ from .hlo import Program, parse_program
 from .hwspec import HardwareSpec, TPU_V5E
 from .pa import pa_report
 from .roofline import Roofline, roofline_from_program
+from .schedule import ScheduleResult, schedule_program
 
 
 @dataclass
@@ -33,9 +34,20 @@ class SimReport:
     pa: str
     xla_cost_analysis: Optional[Dict[str, float]] = None
     memory_analysis: Optional[Dict[str, float]] = None
+    # dependency-aware O3 schedule (engine="schedule"|"both"); None for the
+    # fast flat-occupancy path
+    schedule: Optional[ScheduleResult] = None
+    engine_mode: str = "occupancy"
+    # the parsed per-op program (not serialized in to_json) so callers can
+    # re-cost/re-schedule without re-parsing the HLO text
+    program: Optional[Program] = None
 
     @property
     def t_est(self) -> float:
+        """Headline estimate: schedule-derived when the O3 engine ran as
+        the primary mode, flat-occupancy otherwise (both always carried)."""
+        if self.engine_mode == "schedule" and self.schedule is not None:
+            return self.schedule.t_est
         return self.engine.t_est
 
     def to_json(self) -> str:
@@ -56,7 +68,24 @@ class SimReport:
             "program": self.program_summary,
             "xla_cost_analysis": self.xla_cost_analysis,
             "memory_analysis": self.memory_analysis,
+            "engine_mode": self.engine_mode,
         }
+        if self.schedule is not None:
+            s = self.schedule
+            d["schedule"] = {
+                "t_est": s.t_est,
+                "t_roofline": s.t_roofline,
+                "t_serial": s.t_serial,
+                "t_dataflow": s.t_dataflow,
+                "port_busy": s.port_busy,
+                "overlap_fraction": s.overlap_fraction,
+                "n_edges": s.n_edges,
+                "stall_by_reason": s.stall_by_reason,
+                "critical_path": [
+                    {"op": c.op.name, "port": c.port, "start": c.start,
+                     "finish": c.finish, "bound_by": c.bound_by}
+                    for c in s.critical_path[:32]],
+            }
         return json.dumps(d, indent=1, sort_keys=True)
 
 
@@ -88,8 +117,20 @@ def _cost_stats(compiled) -> Optional[Dict[str, float]]:
 
 def simulate(compiled, hw: HardwareSpec = TPU_V5E, n_chips: int = 1,
              model_flops_global: float = 0.0, compute_dtype: str = "bf16",
-             title: str = "") -> SimReport:
-    """``compiled`` is a jax Compiled object, or raw HLO text."""
+             title: str = "", engine: str = "occupancy") -> SimReport:
+    """``compiled`` is a jax Compiled object, or raw HLO text.
+
+    ``engine`` selects the overlap model:
+      * ``"occupancy"`` (default) — the flat multi-port sum with assumed
+        ``dma_overlap``/``ici_overlap`` fractions; fastest.
+      * ``"schedule"``  — the dependency-aware O3 list scheduler
+        (``core.schedule``): overlap is derived from the def-use graph and
+        the hw issue/window/queue knobs; ``report.t_est`` comes from it.
+      * ``"both"``      — run both; ``t_est`` stays occupancy-derived, the
+        schedule rides along in ``report.schedule`` for comparison.
+    """
+    if engine not in ("occupancy", "schedule", "both"):
+        raise ValueError(f"unknown engine mode {engine!r}")
     if isinstance(compiled, str):
         text = compiled
         cost = mem = None
@@ -99,6 +140,8 @@ def simulate(compiled, hw: HardwareSpec = TPU_V5E, n_chips: int = 1,
         mem = _mem_stats(compiled)
     prog = parse_program(text)
     eng = simulate_program(prog, hw, compute_dtype=compute_dtype)
+    sched = (schedule_program(prog, hw, compute_dtype=compute_dtype)
+             if engine in ("schedule", "both") else None)
     rf = roofline_from_program(prog, hw, n_chips, model_flops_global,
                                compute_dtype)
     summary = {
@@ -110,5 +153,8 @@ def simulate(compiled, hw: HardwareSpec = TPU_V5E, n_chips: int = 1,
         "n_partitions": prog.n_partitions,
     }
     return SimReport(hw=hw.name, n_chips=n_chips, roofline=rf, engine=eng,
-                     program_summary=summary, pa=pa_report(rf, eng, prog, title),
-                     xla_cost_analysis=cost, memory_analysis=mem)
+                     program_summary=summary,
+                     pa=pa_report(rf, eng, prog, title, sched=sched,
+                                  engine_mode=engine),
+                     xla_cost_analysis=cost, memory_analysis=mem,
+                     schedule=sched, engine_mode=engine, program=prog)

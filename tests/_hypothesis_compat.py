@@ -1,0 +1,29 @@
+"""Hypothesis, or graceful stand-ins when it is not installed.
+
+The seed suite hard-imported hypothesis and died at collection.  Importing
+from this module instead keeps every non-property test running in a bare
+environment: @given-decorated tests are individually skipped, everything
+else collects and runs.  Install hypothesis (requirements-dev.txt) to run
+the property tests too.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                        # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """st.floats(...) etc. evaluate at module scope; return dummies."""
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+    def settings(*args, **kwargs):
+        return lambda f: f
+
+    def given(*args, **kwargs):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed (see requirements-dev.txt)")(f)

@@ -5,6 +5,13 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: compiles through jax/XLA; deselect with -m 'not slow' for a "
+        "fast pure-python simulator signal (tier-1 runs everything)")
+
+
 @pytest.fixture
 def key():
     return jax.random.PRNGKey(0)

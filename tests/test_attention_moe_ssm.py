@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow        # jax-compiling numerics sweeps
+
 from repro.configs import ARCHS, reduced_config
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.models.attention import (blocked_attention, decode_attention,

@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow        # checkpoint/restart loops compile steps
+
 from repro.train import checkpoint as ck
 from repro.train.fault import FaultInjector, InjectedFault, run_with_retries
 

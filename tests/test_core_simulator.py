@@ -6,7 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.engine import collective_factor, simulate_program
 from repro.core.hlo import OpStat, Program, parse_program
@@ -21,6 +22,7 @@ def _compiled(fn, *args):
     return jax.jit(fn).lower(*args).compile()
 
 
+@pytest.mark.slow
 def test_parser_dot_flops_exact():
     M, K, N = 64, 128, 32
     a = jnp.ones((M, K), jnp.float32)
@@ -33,6 +35,7 @@ def test_parser_dot_flops_exact():
     assert sorted(mnk) == sorted((M, N, K))
 
 
+@pytest.mark.slow
 def test_parser_while_trip_multiplication():
     """A scan of T steps must multiply body op costs by T."""
     T, M = 9, 32
@@ -50,6 +53,7 @@ def test_parser_while_trip_multiplication():
     assert dot_flops == T * 2 * M * M * M
 
 
+@pytest.mark.slow
 def test_parser_transcendental_classification():
     x = jnp.ones((1024,), jnp.float32)
     prog = parse_program(_compiled(lambda x: jnp.exp(x) + jnp.sin(x), x)
@@ -62,6 +66,7 @@ def test_parser_transcendental_classification():
     assert tb.get("sine", 0) == 1024
 
 
+@pytest.mark.slow
 def test_parser_dus_inplace_and_slice_reads():
     """Scan emitting per-step rows must NOT count full-buffer traffic per
     step (in-place DUS + sliced reads)."""
@@ -182,7 +187,80 @@ def test_property_model_flops(n, d, kind):
     assert mf == (6.0 if kind == "train" else 2.0) * n * d
 
 
+@settings(max_examples=60, deadline=None)
+@given(g1=st.integers(min_value=1, max_value=4096),
+       g2=st.integers(min_value=1, max_value=4096))
+def test_property_collective_factor_monotone_in_group_size(g1, g2):
+    """Growing the group never cheapens a collective (ring algorithm)."""
+    lo, hi = sorted((g1, g2))
+    for kind in ("all-reduce", "all-gather", "reduce-scatter",
+                 "all-to-all", "collective-permute"):
+        assert collective_factor(kind, lo) <= collective_factor(kind, hi) \
+            + 1e-12, (kind, lo, hi)
+
+
+@settings(max_examples=40, deadline=None)
+@given(b=st.floats(min_value=1e3, max_value=1e12, allow_nan=False),
+       payload=st.floats(min_value=1e3, max_value=1e12, allow_nan=False),
+       g=st.integers(min_value=2, max_value=256))
+def test_property_bf16_denormalization_halves_f32_traffic(b, payload, g):
+    """compute_dtype='bf16' must cost f32 bytes AND collective payloads at
+    half width (the inverted XLA:CPU float-normalization, DESIGN.md §7)."""
+    ew = _mk_op(opclass="elementwise", opcode="add", dtype="f32",
+                flops=0.0, bytes_accessed=b, dot_dims=None)
+    coll = _mk_op(name="ar", opclass="collective", opcode="all-reduce",
+                  dtype="f32", comm_bytes=payload, group_size=g,
+                  dot_dims=None)
+    prog = Program([ew, coll], "e", 1)
+    full = simulate_program(prog, TPU_V5E, compute_dtype=None)
+    half = simulate_program(prog, TPU_V5E, compute_dtype="bf16")
+    assert half.port_busy["mem"] == pytest.approx(
+        0.5 * full.port_busy["mem"], rel=1e-9)
+    startup = TPU_V5E.collective_startup_us * 1e-6
+    assert half.port_busy["ici"] - startup == pytest.approx(
+        0.5 * (full.port_busy["ici"] - startup), rel=1e-9)
+    # bf16-native ops are untouched
+    bf = _mk_op(opclass="elementwise", opcode="add", dtype="bf16",
+                flops=0.0, bytes_accessed=b, dot_dims=None)
+    prog_bf = Program([bf], "e", 1)
+    assert simulate_program(prog_bf, TPU_V5E, compute_dtype="bf16").t_est \
+        == pytest.approx(simulate_program(prog_bf, TPU_V5E).t_est, rel=1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 15))
+def test_property_port_busy_totals_equal_sum_over_ops(seed, n):
+    """port_busy is an exact per-op sum: totals must match the per-op
+    OpTime decomposition (<=20 ops so top_ops holds all of them)."""
+    rng = np.random.default_rng(seed)
+    classes = [("matmul", "dot"), ("elementwise", "add"), ("data", "copy"),
+               ("collective", "all-reduce"), ("transcendental",
+                                              "exponential")]
+    ops = []
+    for i in range(n):
+        cls, opc = classes[rng.integers(len(classes))]
+        ops.append(_mk_op(
+            name=f"o{i}", opclass=cls, opcode=opc, dtype="f32",
+            flops=float(rng.integers(1, 10**9)),
+            bytes_accessed=float(rng.integers(1, 10**9)),
+            comm_bytes=float(rng.integers(1, 10**9)),
+            group_size=int(rng.integers(1, 64)),
+            count=float(rng.integers(1, 10)), dot_dims=None))
+    r = simulate_program(Program(ops, "e", 1), TPU_V5E)
+    for port in ("mxu", "vpu"):
+        want = sum(t.t_compute * t.op.count for t in r.top_ops
+                   if t.port == port)
+        assert r.port_busy.get(port, 0.0) == pytest.approx(want, rel=1e-9, abs=1e-18)
+    assert r.port_busy["mem"] == pytest.approx(
+        sum(t.t_mem * t.op.count for t in r.top_ops), rel=1e-9, abs=1e-18)
+    assert r.port_busy["ici"] == pytest.approx(
+        sum(t.t_ici * t.op.count for t in r.top_ops), rel=1e-9, abs=1e-18)
+    assert sum(r.by_class_time.values()) == pytest.approx(
+        r.t_serial - r.startup, rel=1e-9)
+
+
 # ------------------------------------------------------------------ simulate
+@pytest.mark.slow
 def test_simulate_end_to_end_small_matmul():
     a = jnp.ones((256, 256), jnp.bfloat16)
     compiled = _compiled(lambda a: a @ a, a)

@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow        # compiles a train step per architecture
+
 from repro.configs import ARCHS, RunConfig, ShapeConfig, reduced_config
 from repro.models.lm import build_model
 from repro.train.trainer import make_train_step

@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow        # real training loops / serve engine
+
 from repro.configs import ARCHS, RunConfig, ShapeConfig, reduced_config
 from repro.data.synthetic import SyntheticLMDataset
 from repro.launch.mesh import make_host_mesh
