@@ -19,20 +19,42 @@ from __future__ import annotations
 
 import argparse
 import json
-import sys
+import time
 from pathlib import Path
 
-import jax
 from jax.experimental import enable_x64 as jax_enable_x64
 
 from repro.configs.a64fx_kernelsuite import (
     KERNELS, PAPER_MEAN_ABS_DIFF_PCT, PAPER_MEAN_DIFF_PCT,
     PAPER_STD_DIFF_PCT, PAPER_WITHIN_10PCT_FRACTION)
 from repro.core import calibrate
-from repro.core.hwspec import A64FX_CORE
+from repro.core.cost import cost_program
+from repro.core.hwspec import A64FX_CORE, HardwareSpec
+from repro.core.schedule import schedule_program
 from repro.core.simulate import simulate
 
 OUT = Path("experiments/bench")
+BENCH_JSON = Path("BENCH_kernel_suite.json")
+
+
+def scheduler_throughput(table: calibrate.AccuracyTable,
+                         hw: HardwareSpec, min_wall_s: float = 0.2) -> dict:
+    """Wall-clock throughput of the O3 list scheduler over the suite's
+    parsed programs (pure python, no jax): the perf number to track as the
+    scheduling engine grows.  Programs are costed OUTSIDE the timed loop
+    so the metric isolates the scheduler from the cost pipeline."""
+    costed = [cost_program(p, hw, compute_dtype="f64")
+              for p in table.programs]
+    n_ops = rounds = 0
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < min_wall_s:
+        for prog, ops in zip(table.programs, costed):
+            schedule_program(prog, hw, costed=ops)
+            n_ops += len(prog.ops)
+        rounds += 1
+    wall = time.perf_counter() - t0
+    return {"scheduled_ops": n_ops, "rounds": rounds, "wall_s": wall,
+            "ops_per_s": n_ops / wall if wall > 0 else 0.0}
 
 
 def a64fx_cycles_per_8elem(kernel_name: str, n: int) -> float:
@@ -74,8 +96,12 @@ def main(argv=None) -> int:
           "occupancy vs schedule engine) ==")
     table = calibrate.kernel_accuracy_table(hw, size_scale=args.size_scale,
                                             kernels=kernels,
-                                            keep_programs=args.sweep_o3)
+                                            keep_programs=True)
     print(table.report())
+
+    thr = scheduler_throughput(table, hw)
+    print(f"\n== scheduler throughput: {thr['ops_per_s']:.0f} ops/s "
+          f"({thr['scheduled_ops']} ops in {thr['wall_s'] * 1e3:.0f} ms) ==")
 
     sweep = None
     if args.sweep_o3:
@@ -127,7 +153,24 @@ def main(argv=None) -> int:
             "opcode_factor": hw.opcode_factor,
         },
     }, indent=1))
-    print(f"\nwrote {OUT / 'kernel_suite.json'}")
+    print(f"wrote {OUT / 'kernel_suite.json'}")
+
+    # perf-trajectory artifact (tracked from ISSUE 2 onward): per-kernel
+    # t_est under both engines + wall-clock scheduler throughput
+    BENCH_JSON.write_text(json.dumps({
+        "kernels": {r.name: {"measured_us": r.measured_us,
+                             "t_est_occupancy_us": r.simulated_us,
+                             "t_est_schedule_us": r.simulated_sched_us}
+                    for r in table.rows},
+        "scheduler_throughput": thr,
+        "summary": {
+            "mean_abs_diff_pct": table.mean_abs_diff,
+            "sched_mean_abs_diff_pct": table.sched_mean_abs_diff,
+            "within_10pct": table.within_10pct,
+            "sched_within_10pct": table.sched_within_10pct,
+        },
+    }, indent=1))
+    print(f"wrote {BENCH_JSON}")
     return 0
 
 

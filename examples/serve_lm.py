@@ -10,7 +10,6 @@ attention-free (mamba2) architecture, whose "cache" is the SSD state.
 """
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -19,7 +19,6 @@ from repro.configs.base import ModelConfig
 from repro.launch.train import train_loop
 from repro.models.lm import build_model
 from repro.train.fault import FaultInjector
-from repro.train.schedule import ScheduleConfig, make_schedule
 
 SIZES = {
     # ~100M params: 12L d=768 (GPT-2-small-ish), GQA 12/4, SwiGLU

@@ -6,10 +6,8 @@ can be hashed, diffed and serialized without pulling in jax.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Optional
 
 
 def _round_up(x: int, m: int) -> int:

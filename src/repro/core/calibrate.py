@@ -26,17 +26,17 @@ from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 # jax.enable_x64 left the top-level namespace in jax 0.4.31+
 from jax.experimental import enable_x64 as jax_enable_x64
 
 from ..configs.a64fx_kernelsuite import KERNELS, Kernel
 from ..kernels import ref as kref
 from ..kernels.stream import EXPRS, _DTYPES
+from .cost import cost_program
 from .hlo import Program
 from .hwspec import CPU_HOST, HardwareSpec
 from .schedule import schedule_program
-from .simulate import SimReport, simulate
+from .simulate import simulate
 
 SIZE_SCALE = 1024     # paper: iter/1000; here: n x1024 (see module docstring)
 
@@ -107,12 +107,20 @@ def fit_cpu_host(n_mem: int = 1 << 21, n_fac: int = 1 << 15) -> HardwareSpec:
     the functional units, fit each level with a benchmark that isolates it,
     then validate on all 28 kernels (§5.1).
 
-    * ``hbm_read_bw``  — DRAM-resident ``add`` at the SAME array scale the
-      suite evaluates (stream bandwidth is size-dependent on a shared VM),
-    * ``vmem_bw``      — L2-resident ``add`` (cache_model stream rate),
-    * ``vpu_flops``    — a 16-deep Horner polynomial on an L2-resident
+    Each memory-hierarchy level is fitted separately (the paper's L1/L2/
+    HBM2 function expansion, tuned against the test chip):
+
+    * ``hbm_write_bw`` — a pure-store fill (``zeros_like``) on a DRAM-
+      resident array isolates the store path,
+    * ``hbm_read_bw``  — DRAM-resident ``add`` (2 loads + 1 store) at the
+      SAME array scale the suite evaluates, with the fitted store time
+      subtracted — the load path de-blended from the mixed stream,
+    * ``vmem_bw``      — LLC-resident ``add`` (the inner level's stream
+      rate; load/store symmetric, there is no port asymmetry to see
+      through the LLC at this scale),
+    * ``vpu_flops``    — a 16-deep Horner polynomial on an LLC-resident
       array: ALU-bound, so it measures the functional unit, not a cache,
-    * per-opcode factors — L2-resident runs with the *estimated stream
+    * per-opcode factors — runs with the *estimated per-level stream
       time subtracted*, so the factor is pure instruction cost (the
       paper's per-OpClass latency table, de-masked from bandwidth).
     """
@@ -131,11 +139,24 @@ def fit_cpu_host(n_mem: int = 1 << 21, n_fac: int = 1 << 15) -> HardwareSpec:
         t_poly = _median_time(jax.jit(_poly16), (xp,), 25)
         alu = 32.0 * n_fac / max(t_poly - startup, 1e-9)
 
-        # --- stream rates: L2-resident and DRAM-resident add (3 streams)
+        # --- stream rates: LLC-resident and DRAM-resident add (3 streams)
         t_add_l2 = t_kernel("add", n_fac, 25)
         l2_bw = 3 * 8 * n_fac / max(t_add_l2 - startup, 1e-9)
         t_add_mem = t_kernel("add", n_mem)
-        mem_bw = 3 * 8 * n_mem / max(t_add_mem - startup, 1e-9)
+        blend_bw = 3 * 8 * n_mem / max(t_add_mem - startup, 1e-9)
+
+        # --- DRAM store path: a pure fill isolates writes; the add stream
+        # then yields the load path with the store time subtracted
+        xm = jnp.zeros((n_mem,), jnp.float64)
+        t_fill = _median_time(jax.jit(jnp.zeros_like), (xm,), 15)
+        wr_bw = 8 * n_mem / max(t_fill - startup, 1e-9)
+        t_loads = t_add_mem - startup - 8 * n_mem / wr_bw
+        rd_bw = (2 * 8 * n_mem / t_loads) if t_loads > 0 else blend_bw
+        # hierarchy sanity (the §12 monotonicity contract): a noisy-VM LLC
+        # measurement can come out slower than DRAM because the small-array
+        # run is dispatch-dominated; an inner level is never slower than
+        # the level it front-ends
+        l2_bw = max(l2_bw, rd_bw, wr_bw)
 
         # --- per-opcode factors at the EVALUATION scale, with the stream
         # time subtracted (paper: instruction latencies from Fujitsu specs;
@@ -145,25 +166,26 @@ def fit_cpu_host(n_mem: int = 1 << 21, n_fac: int = 1 << 15) -> HardwareSpec:
         for kname, opcode in _FACTOR_FIT.items():
             k = by_name[kname]
             _, n_in, _, _ = EXPRS[kname]
-            streams = n_in + 1                       # inputs + output
             n_eval = k.n * SIZE_SCALE
             t = t_kernel(kname, n_eval, 9)
-            t_mem = streams * 8 * n_eval / mem_bw
+            # per-level asymmetric stream estimate: loads + store
+            t_mem = n_in * 8 * n_eval / rd_bw + 8 * n_eval / wr_bw
             factors[opcode] = max(1.0,
                                   (t - startup - t_mem) * alu / n_eval)
         # mod = divide + round-trip; remainder rides the divide entry
         factors.setdefault("remainder", factors.get("divide", 4.0))
 
+    # the fitted two-level hierarchy (LLC -> DRAM) is derived from these
+    # boundary scalars by HardwareSpec.memory_hierarchy()
     return CPU_HOST.with_(
         vpu_flops={"f64": alu, "f32": 2 * alu, "default": alu},
         peak_flops={"f64": alu, "f32": 2 * alu, "default": alu},
         transcendental_factor=max(2.0, factors.get("exponential", 4.0)),
         opcode_factor=factors,
-        hbm_read_bw=mem_bw,
-        hbm_write_bw=mem_bw,
+        hbm_read_bw=rd_bw,
+        hbm_write_bw=wr_bw,
         vmem_bytes=24 * 2**20,      # LLC stand-in
         vmem_bw=l2_bw,
-        cache_model=True,
         # a CPU core stalls on the miss THEN computes: additive composition
         # (the A64FX/TPU overlap model does not transfer to the host)
         dma_overlap=0.0,
@@ -301,6 +323,10 @@ def sweep_o3(table: AccuracyTable, hw: HardwareSpec,
     if not table.programs:
         raise ValueError("sweep_o3 needs kernel_accuracy_table("
                          "keep_programs=True)")
+    # per-op costs are independent of the O3 knobs: cost each program ONCE
+    # and re-schedule the shared costed lists across the whole grid
+    costed = [cost_program(p, hw, compute_dtype=compute_dtype)
+              for p in table.programs]
     results: List[Dict] = []
     for w in windows:
         for mw in mem_widths:
@@ -310,9 +336,10 @@ def sweep_o3(table: AccuracyTable, hw: HardwareSpec,
                     issue_width={**hw.issue_width, "mem": mw},
                     queue_depth={p: qd for p in ("mxu", "vpu", "mem", "ici")})
                 diffs = []
-                for prog, row in zip(table.programs, table.rows):
+                for prog, ops, row in zip(table.programs, costed, table.rows):
                     t = schedule_program(prog, cand,
-                                         compute_dtype=compute_dtype).t_est
+                                         compute_dtype=compute_dtype,
+                                         costed=ops).t_est
                     diffs.append(abs(t * 1e6 - row.measured_us)
                                  / row.measured_us * 100.0)
                 results.append({"inflight_window": w, "mem_issue_width": mw,

@@ -1,0 +1,153 @@
+"""Unified per-op cost pipeline — one costing pass, two engines.
+
+Extracted from ``core.engine`` so that the flat occupancy engine, the
+dependency-aware schedule engine, calibration, and the PA report all
+consume the SAME costed op list (``cost_program``) instead of re-running
+the cost model per engine:
+
+* port assignment (MXU / VPU / DMA-mem / ICI) and compute time from the
+  dtype-dependent peak FLOP/s tables,
+* memory time from the multi-level hierarchy router (``core.memory``):
+  per-op reads and writes are split and charged at the level the
+  reuse-distance/working-set model says the data lives at,
+* collective time from ring-algorithm factors over ``group_size``.
+
+``cost_op`` stays available for costing a single op out of program
+context (traffic falls back to the working-set rule).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Optional
+
+from .hlo import OpStat, Program
+from .hwspec import HardwareSpec
+from .memory import MemTraffic, route_program, route_standalone
+
+
+@dataclass
+class OpTime:
+    op: OpStat
+    t_compute: float
+    t_mem: float
+    t_ici: float
+    port: str
+    useful_flops: float = 0.0     # matmul lane accounting (MXU utilization)
+    padded_flops: float = 0.0
+    traffic: Optional[MemTraffic] = None   # per-level routed bytes/times
+
+    @property
+    def t_op(self) -> float:
+        return max(self.t_compute, self.t_mem, self.t_ici)
+
+
+# ring-algorithm bandwidth factors: time = factor(g) * payload / bw
+def collective_factor(kind: str, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g
+    if kind == "all-gather":
+        return float(g - 1)          # payload = shard bytes
+    if kind == "reduce-scatter":
+        return (g - 1) / g           # payload = full buffer
+    if kind == "all-to-all":
+        return (g - 1) / g
+    if kind == "collective-permute":
+        return 1.0
+    return 1.0
+
+
+def cost_op(o: OpStat, hw: HardwareSpec, ici_bw: float,
+            compute_dtype: Optional[str] = None,
+            traffic: Optional[MemTraffic] = None) -> Optional[OpTime]:
+    """Per-op port assignment + per-instance times.  ``traffic`` is the
+    hierarchy-routed memory traffic from ``cost_program``; when absent the
+    op is routed standalone (working-set rule only).  Returns None for ops
+    the cost model does not charge."""
+    denorm = compute_dtype in ("bf16", "f16")
+
+    def eff_dtype() -> str:
+        if denorm and o.dtype == "f32":
+            return compute_dtype
+        return o.dtype
+
+    def trans_time() -> float:
+        """Per-opcode latency table (paper's OpClass extension)."""
+        if not o.trans_by_opcode:
+            return o.transcendentals * hw.transcendental_factor
+        return sum(v * hw.opcode_factor.get(k, hw.transcendental_factor)
+                   for k, v in o.trans_by_opcode.items())
+
+    if traffic is None and o.opclass != "collective":
+        traffic = route_standalone(o, hw.memory_hierarchy(), compute_dtype,
+                                   warm_caches=hw.warm_caches)
+
+    t_c = t_m = t_i = 0.0
+    useful = padded_f = 0.0
+    port = "vpu"
+    if o.opclass == "matmul":
+        port = "mxu"
+        util = 1.0
+        if o.dot_dims:
+            m, n, k = o.dot_dims
+            if min(m, n, k) < hw.min_matmul_dim_for_mxu:
+                # tiny contraction/row dims: XLA emits a VPU multiply-
+                # reduce, NOT an MXU matmul — no 128-tile quantization
+                # (8-lane sublane padding only).
+                port = "vpu"
+                util = m * n * k / (max(m, 8 * math.ceil(m / 8), 1)
+                                    * n * k) if m else 1.0
+            else:
+                tm, tk, tn = hw.mxu_tile
+                pm = math.ceil(m / tm) * tm
+                pk = math.ceil(k / tk) * tk
+                pn = math.ceil(n / tn) * tn
+                util = (m * n * k) / max(pm * pn * pk, 1)
+        padded = o.flops / max(util, 1e-9)
+        useful = o.flops * o.count
+        padded_f = padded * o.count
+        peak = (hw.matmul_flops(eff_dtype()) if port == "mxu"
+                else hw.vector_flops(eff_dtype()))
+        t_c = padded / peak
+        t_m = traffic.t_mem
+    elif o.opclass in ("elementwise", "reduce"):
+        base = o.flops - o.transcendentals
+        t_c = (base + trans_time()) / hw.vector_flops(eff_dtype())
+        t_m = traffic.t_mem
+    elif o.opclass == "transcendental":
+        t_c = trans_time() / hw.vector_flops(eff_dtype())
+        t_m = traffic.t_mem
+    elif o.opclass == "data":
+        t_m = traffic.t_mem
+        port = "mem"
+    elif o.opclass == "collective":
+        f = collective_factor(o.opcode, o.group_size)
+        payload = (0.5 * o.comm_bytes
+                   if denorm and o.dtype == "f32" else o.comm_bytes)
+        t_i = f * payload / ici_bw + hw.collective_startup_us * 1e-6
+        port = "ici"
+        traffic = None
+    else:
+        return None
+
+    # OpClass throughput overrides (the paper's operand-type table)
+    t_c *= hw.opclass_throughput.get(o.opclass, 1.0)
+    return OpTime(o, t_c, t_m, t_i, port,
+                  useful_flops=useful, padded_flops=padded_f,
+                  traffic=traffic)
+
+
+def cost_program(prog: Program, hw: HardwareSpec,
+                 links_per_collective: int = 2,
+                 compute_dtype: Optional[str] = None
+                 ) -> List[Optional[OpTime]]:
+    """Cost every op once, with hierarchy routing done in program context
+    (reuse distances over the def-use edges).  Both engines consume this
+    list; ``simulate(engine="both")`` computes it exactly once."""
+    ici_bw = links_per_collective * hw.ici_bw_per_link
+    traffic = route_program(prog, hw.memory_hierarchy(), compute_dtype,
+                            warm_caches=hw.warm_caches)
+    return [cost_op(o, hw, ici_bw, compute_dtype, traffic=tr)
+            for o, tr in zip(prog.ops, traffic)]

@@ -12,33 +12,22 @@ async collectives) combines port totals into an execution-time estimate:
     t_est        = compute + mem_exposed + ici_exposed + startup
     t_roofline   = max(t_mxu + t_vpu, t_mem, t_ici)      (perfect overlap)
 
-Collective times use ring-algorithm factors on ``group_size`` with a
+Per-op times come from the unified cost pipeline (``core.cost``): memory
+time is routed through the multi-level hierarchy (``core.memory``), and
+collective times use ring-algorithm factors on ``group_size`` with a
 bidirectional ring (2 links) per collective.
 """
 from __future__ import annotations
 
-import math
 from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
-from .hlo import OpStat, Program
+# re-exported for backward compatibility: the cost model used to live here
+from .cost import OpTime, collective_factor, cost_op, cost_program  # noqa: F401
+from .hlo import Program
 from .hwspec import HardwareSpec
-
-
-@dataclass
-class OpTime:
-    op: OpStat
-    t_compute: float
-    t_mem: float
-    t_ici: float
-    port: str
-    useful_flops: float = 0.0     # matmul lane accounting (MXU utilization)
-    padded_flops: float = 0.0
-
-    @property
-    def t_op(self) -> float:
-        return max(self.t_compute, self.t_mem, self.t_ici)
+from .memory import aggregate_traffic
 
 
 @dataclass
@@ -53,114 +42,22 @@ class EngineResult:
     by_class_time: Dict[str, float]
     top_ops: List[OpTime]
     collective_time_by_kind: Dict[str, float]
+    # per-memory-level totals (count-multiplied read/write bytes), for the
+    # PA report's hierarchy section
+    traffic_by_level: Dict[str, Dict[str, float]] = field(default_factory=dict)
 
     @property
     def bound_by(self) -> str:
+        if not self.port_busy:
+            return "mem"
         return max(self.port_busy, key=lambda k: self.port_busy[k])
-
-
-# ring-algorithm bandwidth factors: time = factor(g) * payload / bw
-def collective_factor(kind: str, g: int) -> float:
-    if g <= 1:
-        return 0.0
-    if kind == "all-reduce":
-        return 2.0 * (g - 1) / g
-    if kind == "all-gather":
-        return float(g - 1)          # payload = shard bytes
-    if kind == "reduce-scatter":
-        return (g - 1) / g           # payload = full buffer
-    if kind == "all-to-all":
-        return (g - 1) / g
-    if kind == "collective-permute":
-        return 1.0
-    return 1.0
-
-
-def cost_op(o: OpStat, hw: HardwareSpec, ici_bw: float,
-            compute_dtype: Optional[str] = None) -> Optional[OpTime]:
-    """Per-op port assignment + per-instance times — shared by the flat
-    occupancy engine below and by ``core.schedule``'s dependency-aware
-    engine.  Returns None for ops the cost model does not charge."""
-    denorm = compute_dtype in ("bf16", "f16")
-
-    def eff_dtype() -> str:
-        if denorm and o.dtype == "f32":
-            return compute_dtype
-        return o.dtype
-
-    def eff_bytes() -> float:
-        if denorm and o.dtype == "f32":
-            return 0.5 * o.bytes_accessed
-        return o.bytes_accessed
-
-    def mem_bw(nbytes: float) -> float:
-        if hw.cache_model and nbytes <= hw.vmem_bytes:
-            return hw.vmem_bw
-        return hw.hbm_read_bw
-
-    def trans_time() -> float:
-        """Per-opcode latency table (paper's OpClass extension)."""
-        if not o.trans_by_opcode:
-            return o.transcendentals * hw.transcendental_factor
-        return sum(v * hw.opcode_factor.get(k, hw.transcendental_factor)
-                   for k, v in o.trans_by_opcode.items())
-
-    t_c = t_m = t_i = 0.0
-    useful = padded_f = 0.0
-    port = "vpu"
-    if o.opclass == "matmul":
-        port = "mxu"
-        util = 1.0
-        if o.dot_dims:
-            m, n, k = o.dot_dims
-            if min(m, n, k) < hw.min_matmul_dim_for_mxu:
-                # tiny contraction/row dims: XLA emits a VPU multiply-
-                # reduce, NOT an MXU matmul — no 128-tile quantization
-                # (8-lane sublane padding only).
-                port = "vpu"
-                util = m * n * k / (max(m, 8 * math.ceil(m / 8), 1)
-                                    * n * k) if m else 1.0
-            else:
-                tm, tk, tn = hw.mxu_tile
-                pm = math.ceil(m / tm) * tm
-                pk = math.ceil(k / tk) * tk
-                pn = math.ceil(n / tn) * tn
-                util = (m * n * k) / max(pm * pn * pk, 1)
-        padded = o.flops / max(util, 1e-9)
-        useful = o.flops * o.count
-        padded_f = padded * o.count
-        peak = (hw.matmul_flops(eff_dtype()) if port == "mxu"
-                else hw.vector_flops(eff_dtype()))
-        t_c = padded / peak
-        t_m = eff_bytes() / mem_bw(eff_bytes())
-    elif o.opclass in ("elementwise", "reduce"):
-        base = o.flops - o.transcendentals
-        t_c = (base + trans_time()) / hw.vector_flops(eff_dtype())
-        t_m = eff_bytes() / mem_bw(eff_bytes())
-    elif o.opclass == "transcendental":
-        t_c = trans_time() / hw.vector_flops(eff_dtype())
-        t_m = eff_bytes() / mem_bw(eff_bytes())
-    elif o.opclass == "data":
-        t_m = eff_bytes() / mem_bw(eff_bytes())
-        port = "mem"
-    elif o.opclass == "collective":
-        f = collective_factor(o.opcode, o.group_size)
-        payload = (0.5 * o.comm_bytes
-                   if denorm and o.dtype == "f32" else o.comm_bytes)
-        t_i = f * payload / ici_bw + hw.collective_startup_us * 1e-6
-        port = "ici"
-    else:
-        return None
-
-    # OpClass throughput overrides (the paper's operand-type table)
-    t_c *= hw.opclass_throughput.get(o.opclass, 1.0)
-    return OpTime(o, t_c, t_m, t_i, port,
-                  useful_flops=useful, padded_flops=padded_f)
 
 
 def simulate_program(prog: Program, hw: HardwareSpec,
                      links_per_collective: int = 2,
-                     compute_dtype: Optional[str] = None) -> EngineResult:
+                     compute_dtype: Optional[str] = None,
+                     costed: Optional[List[Optional[OpTime]]] = None
+                     ) -> EngineResult:
     """``compute_dtype``: the model's intended compute dtype.  When set to a
     16-bit type, f32 ops are costed as that type (flops AND bytes AND
     collective payloads).  This inverts XLA:CPU's float-normalization pass
@@ -169,7 +66,13 @@ def simulate_program(prog: Program, hw: HardwareSpec,
     bf16) — the paper's operand-type-dependent OpClass table, applied in
     reverse.  f32-by-design state (optimizer moments, the loss) is also
     halved; it is step-frequency (not layer x microbatch frequency) traffic,
-    so the error is bounded and documented in DESIGN.md §7."""
+    so the error is bounded and documented in DESIGN.md §7.
+
+    ``costed``: a precomputed ``cost_program`` list, so callers running
+    both engines (or several reports) pay for costing exactly once.
+    """
+    if costed is None:
+        costed = cost_program(prog, hw, links_per_collective, compute_dtype)
     port_busy: Dict[str, float] = defaultdict(float)
     by_class: Dict[str, float] = defaultdict(float)
     coll_kind: Dict[str, float] = defaultdict(float)
@@ -179,12 +82,10 @@ def simulate_program(prog: Program, hw: HardwareSpec,
     n_ops = 0.0
     useful_f, padded_f = 0.0, 0.0
 
-    ici_bw = links_per_collective * hw.ici_bw_per_link
-
-    for o in prog.ops:
-        ot = cost_op(o, hw, ici_bw, compute_dtype)
+    for ot in costed:
         if ot is None:
             continue
+        o = ot.op
         t_c, t_m, t_i, port = ot.t_compute, ot.t_mem, ot.t_ici, ot.port
         useful_f += ot.useful_flops
         padded_f += ot.padded_flops
@@ -201,11 +102,19 @@ def simulate_program(prog: Program, hw: HardwareSpec,
         n_ops += o.count
         op_times.append(ot)
 
-    compute = port_busy["mxu"] + port_busy["vpu"]
-    mem_exposed = max(0.0, port_busy["mem"] - hw.dma_overlap * compute)
-    ici_exposed = max(0.0, port_busy["ici"] - hw.ici_overlap * compute)
+    # .get, not [] — indexing the defaultdict would materialize phantom
+    # zero ports and break bound_by's empty-program fallback
+    compute = port_busy.get("mxu", 0.0) + port_busy.get("vpu", 0.0)
+    mem_exposed = max(0.0, port_busy.get("mem", 0.0)
+                      - hw.dma_overlap * compute)
+    ici_exposed = max(0.0, port_busy.get("ici", 0.0)
+                      - hw.ici_overlap * compute)
     t_est = compute + mem_exposed + ici_exposed + startup
-    t_roofline = max(compute, port_busy["mem"], port_busy["ici"])
+    t_roofline = max(compute, port_busy.get("mem", 0.0),
+                     port_busy.get("ici", 0.0))
+
+    traffic = aggregate_traffic([t.traffic for t in op_times],
+                                [t.op.count for t in op_times])
 
     op_times.sort(key=lambda t: -(t.t_op * t.op.count))
     return EngineResult(
@@ -219,4 +128,5 @@ def simulate_program(prog: Program, hw: HardwareSpec,
         by_class_time=dict(by_class),
         top_ops=op_times[:20],
         collective_time_by_kind=dict(coll_kind),
+        traffic_by_level=traffic,
     )

@@ -105,7 +105,11 @@ class OpStat:
     dtype: str
     flops: float = 0.0
     transcendentals: float = 0.0
-    bytes_accessed: float = 0.0  # boundary (HBM) bytes: inputs + outputs
+    bytes_accessed: float = 0.0  # boundary bytes: read_bytes + write_bytes
+    read_bytes: float = 0.0      # boundary bytes loaded (operand streams)
+    write_bytes: float = 0.0     # boundary bytes stored (outputs); the
+                                 # memory model routes reads and writes
+                                 # separately (asymmetric load/store paths)
     comm_bytes: float = 0.0      # collective payload bytes (per device)
     group_size: int = 1
     count: float = 1.0
@@ -118,6 +122,10 @@ class OpStat:
     # boundaries).  The schedule engine turns these into issue constraints;
     # the occupancy engine ignores them.
     deps: List[int] = field(default_factory=list)
+    # bytes consumed along each dep edge (aligned with ``deps``): operand
+    # sizes, split evenly when one operand resolves to several producers.
+    # core.memory turns these into reuse-distance-routed reads.
+    dep_bytes: List[float] = field(default_factory=list)
 
 
 @dataclass
@@ -377,8 +385,10 @@ def _chain_source(comp: Computation, name: str) -> str:
 
 
 def _fusion_boundary_bytes(instr: Instr, comp: Computation,
-                           callee: Optional[Computation]) -> float:
-    """HBM bytes a fusion actually moves — the cache-hierarchy insight:
+                           callee: Optional[Computation]
+                           ) -> Tuple[float, float]:
+    """Boundary (read, write) bytes a fusion actually moves — the
+    cache-hierarchy insight:
 
     * a fusion parameter consumed ONLY by (dynamic-)slice/gather ops reads
       just the sliced region, not the buffer (lax.scan slices the stacked
@@ -393,7 +403,7 @@ def _fusion_boundary_bytes(instr: Instr, comp: Computation,
     """
     out_full = instr.tuple_bytes if instr.is_tuple else instr.out_bytes
     if callee is None:
-        return _operand_bytes(instr, comp) + out_full
+        return _operand_bytes(instr, comp), out_full
 
     # callee parameter name -> fusion operand name (by parameter index)
     param_of: Dict[str, str] = {}
@@ -409,7 +419,7 @@ def _fusion_boundary_bytes(instr: Instr, comp: Computation,
     # in-place DUS detection on the root chain
     root_name = callee.order[-1] if callee.order else ""
     aliased_param: Optional[str] = None
-    out_eff = out_full
+    read_eff, write_eff = 0.0, out_full
     dus = callee.instrs.get(_chain_source(callee, root_name))
     if dus is not None and dus.opcode == "dynamic-update-slice":
         target = _chain_source(callee, dus.operands[0])
@@ -418,7 +428,8 @@ def _fusion_boundary_bytes(instr: Instr, comp: Computation,
             dus.operands[1] if len(dus.operands) > 1 else "", callee)
         if tgt is not None and tgt.opcode == "parameter":
             aliased_param = target
-            out_eff = 2.0 * upd_bytes        # read + write the update region
+            # read + write the update region, in place
+            read_eff, write_eff = upd_bytes, upd_bytes
         # DUS of a freshly-sliced buffer (slice -> update -> emit): the
         # emit is real, but only slice-sized — out_full is already that.
 
@@ -433,7 +444,7 @@ def _fusion_boundary_bytes(instr: Instr, comp: Computation,
             total += sum(u.out_bytes for u in uses)
         else:
             total += _single_operand_bytes(param_of[pname], comp)
-    return total + out_eff
+    return total + read_eff, write_eff
 
 
 def _dot_cost(instr: Instr, comp: Computation):
@@ -610,6 +621,20 @@ def _cost_computation(comp: Computation, comps: Dict[str, Computation],
             s.update(_resolve(o2))
         return sorted(s)
 
+    def _dep_edges(names: List[str]) -> Tuple[List[int], List[float]]:
+        """deps + per-edge operand bytes (split evenly when one operand
+        resolves to several producers, e.g. a while's dataflow sinks)."""
+        acc: Dict[int, float] = {}
+        for o2 in names:
+            idxs = _resolve(o2)
+            if not idxs:
+                continue
+            share = _single_operand_bytes(o2, comp) / len(idxs)
+            for j in idxs:
+                acc[j] = acc.get(j, 0.0) + share
+        deps = sorted(acc)
+        return deps, [acc[j] for j in deps]
+
     for name in comp.order:
         instr = comp.instrs[name]
         opcode = instr.opcode
@@ -633,13 +658,15 @@ def _cost_computation(comp: Computation, comps: Dict[str, Computation],
                         tbo[k] += v * o.count
                     if o.dot_dims is not None:
                         dot_dims = o.dot_dims
-            boundary = _fusion_boundary_bytes(instr, comp, callee_comp)
+            rd_b, wr_b = _fusion_boundary_bytes(instr, comp, callee_comp)
+            deps, dep_b = _dep_edges(instr.operands)
             out.append(OpStat(name, "fusion",
                               "matmul" if dot_dims else "elementwise",
                               instr.dtype, flops=flops, transcendentals=trans,
-                              bytes_accessed=boundary, count=mult,
+                              bytes_accessed=rd_b + wr_b, read_bytes=rd_b,
+                              write_bytes=wr_b, count=mult,
                               dot_dims=dot_dims, trans_by_opcode=dict(tbo),
-                              deps=_union_deps(instr.operands)))
+                              deps=deps, dep_bytes=dep_b))
             producer[name] = [len(out) - 1]
             continue
         if opcode in ("while",):
@@ -741,9 +768,11 @@ def _cost_computation(comp: Computation, comps: Dict[str, Computation],
             if cons and all(comp.instrs[c].opcode in ("dot", "convolution")
                             for c in cons if c in comp.instrs):
                 out_b = 0.0
+        deps, dep_b = _dep_edges(instr.operands)
         stat = OpStat(name, opcode, cls, instr.dtype,
-                      bytes_accessed=in_b + out_b, count=mult,
-                      deps=_union_deps(instr.operands))
+                      bytes_accessed=in_b + out_b, read_bytes=in_b,
+                      write_bytes=out_b, count=mult,
+                      deps=deps, dep_bytes=dep_b)
         nelems = max(1, math.prod(instr.shape))
         if cls == "matmul":
             if opcode == "dot":

@@ -14,12 +14,28 @@ same kinds of knobs for our targets:
   tuned gem5 against Fujitsu's numbers.
 
 All throughputs are per chip; meshes scale them by chip count.
+
+Memory is a real multi-level hierarchy (``core.memory``, DESIGN.md §12):
+``memory_hierarchy()`` returns the ordered ``MemLevel`` list, innermost
+first.  The scalar knobs (``vmem_bytes``/``vmem_bw`` for the innermost
+level, ``hbm_read_bw``/``hbm_write_bw``/``hbm_bytes`` for the outermost)
+remain the calibration/tuning surface; ``mem_levels`` adds intermediate
+levels (the A64FX L2) and asymmetric inner paths.  ``with_`` keeps the two
+representations consistent: replacing a boundary scalar rewrites the
+matching boundary level.
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
+
+from .memory import MemLevel
+
+# scalar knobs that describe the hierarchy's boundary levels; with_() maps
+# them onto mem_levels so that e.g. with_(hbm_write_bw=x) always matters
+_INNER_SCALARS = ("vmem_bytes", "vmem_bw")
+_OUTER_SCALARS = ("hbm_bytes", "hbm_read_bw", "hbm_write_bw")
 
 
 @dataclass(frozen=True)
@@ -29,17 +45,19 @@ class HardwareSpec:
     peak_flops: Dict[str, float]        # dtype -> FLOP/s on the matrix unit
     vpu_flops: Dict[str, float]         # dtype -> FLOP/s on the vector unit
     transcendental_factor: float        # VPU slowdown for exp/log/sin/... ops
-    # ---- memory hierarchy (paper: L1/L2/HBM2 extensions)
-    hbm_read_bw: float                  # bytes/s (asymmetric, like L1<->L2 buses)
+    # ---- memory hierarchy (paper: L1/L2/HBM2 function expansion).
+    # Boundary scalars: outermost level (HBM/DRAM) ...
+    hbm_read_bw: float                  # bytes/s (asymmetric, like L1 ports)
     hbm_write_bw: float
     hbm_bytes: int
+    # ... and innermost level (L1/VMEM):
     vmem_bytes: int
-    vmem_bw: float                      # bytes/s, VMEM<->compute
+    vmem_bw: float                      # bytes/s, symmetric unless mem_levels
     # ---- interconnect
     ici_links: int
     ici_bw_per_link: float              # bytes/s each direction
     # ---- pipeline/overlap model (paper: OoO overlap of compute & memory)
-    dma_overlap: float = 0.85           # fraction of HBM traffic hidden under compute
+    dma_overlap: float = 0.85           # fraction of mem traffic hidden under compute
     ici_overlap: float = 0.30           # fraction of collective time hidden (async)
     serialization: float = 0.10         # residual dependency serialization
     op_startup_ns: float = 2_000.0      # per-HLO-op launch/pipeline-fill cost
@@ -66,18 +84,62 @@ class HardwareSpec:
     # matmul efficiency depends on MXU tile alignment; dims padded to this
     mxu_tile: Tuple[int, int, int] = (128, 128, 128)   # (M, K, N) granularity
     min_matmul_dim_for_mxu: int = 8     # tiny dots fall back to VPU
-    # cache model (paper's L1/L2 extensions): when True, ops whose boundary
-    # working set fits vmem_bytes stream at vmem_bw instead of HBM bw.
-    cache_model: bool = False
+    # explicit memory hierarchy, innermost first.  Empty -> the two-level
+    # (vmem, hbm) hierarchy is derived from the boundary scalars above.
+    # When set, the innermost/outermost levels MUST mirror the scalars
+    # (with_ maintains this; see module docstring).
+    mem_levels: Tuple[MemLevel, ...] = ()
+    # True when the inner levels are hardware-managed caches kept warm
+    # across calls (CPU, A64FX): cold reads and writes take the working-
+    # set residency rule.  False for software-managed scratch (TPU VMEM):
+    # cold traffic streams from the outermost level; only def-use reuse
+    # is charged at inner-level bandwidth (DESIGN.md §12).
+    warm_caches: bool = False
 
     def with_(self, **kw) -> "HardwareSpec":
-        return dataclasses.replace(self, **kw)
+        new = dataclasses.replace(self, **kw)
+        if new.mem_levels and "mem_levels" not in kw \
+                and any(k in kw for k in _INNER_SCALARS + _OUTER_SCALARS):
+            # rewrite ONLY the level fields whose scalar was passed —
+            # e.g. with_(vmem_bytes=...) must not flatten an asymmetric
+            # L1 load/store pair back to the symmetric vmem_bw scalar
+            lv = list(new.mem_levels)
+            inner_kw = {}
+            if "vmem_bytes" in kw:
+                inner_kw["capacity"] = float(new.vmem_bytes)
+            if "vmem_bw" in kw:
+                inner_kw["read_bw"] = float(new.vmem_bw)
+                inner_kw["write_bw"] = float(new.vmem_bw)
+            if inner_kw:
+                lv[0] = dataclasses.replace(lv[0], **inner_kw)
+            outer_kw = {}
+            if "hbm_bytes" in kw:
+                outer_kw["capacity"] = float(new.hbm_bytes)
+            if "hbm_read_bw" in kw:
+                outer_kw["read_bw"] = new.hbm_read_bw
+            if "hbm_write_bw" in kw:
+                outer_kw["write_bw"] = new.hbm_write_bw
+            if outer_kw:
+                lv[-1] = dataclasses.replace(lv[-1], **outer_kw)
+            new = dataclasses.replace(new, mem_levels=tuple(lv))
+        return new
 
     def matmul_flops(self, dtype: str) -> float:
         return self.peak_flops.get(dtype, self.peak_flops.get("default", 1e12))
 
     def vector_flops(self, dtype: str) -> float:
         return self.vpu_flops.get(dtype, self.vpu_flops.get("default", 1e12))
+
+    def memory_hierarchy(self) -> Tuple[MemLevel, ...]:
+        """Ordered hierarchy, innermost first (L1/VMEM -> ... -> HBM)."""
+        if self.mem_levels:
+            return self.mem_levels
+        return (
+            MemLevel("vmem", float(self.vmem_bytes),
+                     float(self.vmem_bw), float(self.vmem_bw)),
+            MemLevel("hbm", float(self.hbm_bytes),
+                     self.hbm_read_bw, self.hbm_write_bw),
+        )
 
 
 TPU_V5E = HardwareSpec(
@@ -91,6 +153,8 @@ TPU_V5E = HardwareSpec(
     hbm_bytes=16 * 2**30,
     vmem_bytes=128 * 2**20,
     vmem_bw=11e12,
+    # mem_levels derived: (vmem 128 MiB @ 11 TB/s, hbm 16 GiB @ 819 GB/s) —
+    # v5e has no intermediate cache between VMEM and HBM
     ici_links=4,                        # 2D torus on a 16x16 pod
     ici_bw_per_link=50e9,
     dma_overlap=0.85,
@@ -108,6 +172,7 @@ TPU_V4 = HardwareSpec(
     hbm_bytes=32 * 2**30,
     vmem_bytes=128 * 2**20,
     vmem_bw=14e12,
+    # mem_levels derived: (vmem 128 MiB @ 14 TB/s, hbm 32 GiB @ 1.23 TB/s)
     ici_links=6,                        # 3D torus
     ici_bw_per_link=50e9,
 )
@@ -130,8 +195,16 @@ A64FX_CMG = HardwareSpec(
     hbm_read_bw=256e9,
     hbm_write_bw=256e9,
     hbm_bytes=8 * 2**30,
-    vmem_bytes=8 * 2**20,               # L2 plays the VMEM role
-    vmem_bw=900e9,
+    vmem_bytes=12 * 64 * 2**10,         # aggregate L1D across the CMG
+    vmem_bw=12 * 230e9,
+    # the paper's three-level function expansion; L1 load/store asymmetry
+    # per the paper text, L2 store path at the same 2:1 ratio
+    mem_levels=(
+        MemLevel("l1d", 12 * 64 * 2**10, 12 * 230e9, 12 * 115e9, 2.8e-9),
+        MemLevel("l2", 8 * 2**20, 900e9, 450e9, 20e-9),
+        MemLevel("hbm2", 8 * 2**30, 256e9, 256e9, 120e-9),
+    ),
+    warm_caches=True,                   # real HW-managed L1/L2
     ici_links=6,                        # TofuD
     ici_bw_per_link=6.8e9,
     dma_overlap=0.7,                    # HW prefetch (K-compatible, per paper)
@@ -139,24 +212,35 @@ A64FX_CMG = HardwareSpec(
     op_startup_ns=100.0,
 )
 
-# One A64FX core (Fig. 3 of the paper is single-core): 1/12 of a CMG, with
-# the L1 port rule folded into the bandwidth numbers (load >230 GB/s,
-# store >115 GB/s per core -> asymmetric read/write).
+# One A64FX core (Fig. 3 of the paper is single-core): private L1D with the
+# paper's asymmetric load/store ports, a 1/12 share of the L2, and a
+# single-core draw on the shared CMG HBM2 (~1/4 of the 256 GB/s, store path
+# at the L1 2:1 ratio).
 A64FX_CORE = A64FX_CMG.with_(
     name="a64fx_core",
     peak_flops={"f64": _A64FX_CORE_F64, "f32": 2 * _A64FX_CORE_F64,
                 "default": _A64FX_CORE_F64},
     vpu_flops={"f64": _A64FX_CORE_F64, "f32": 2 * _A64FX_CORE_F64,
                "default": _A64FX_CORE_F64},
-    hbm_read_bw=230e9,                  # L1 load path (the kernels are L1-resident)
-    hbm_write_bw=115e9,
-    vmem_bytes=64 * 2**10,              # L1D
+    hbm_read_bw=64e9,
+    hbm_write_bw=32e9,
+    vmem_bytes=64 * 2**10,              # private L1D
     vmem_bw=230e9,
+    # per-path bandwidths decrease monotonically outward (the §12
+    # residency-monotonicity contract): the single-core L2 draw is capped
+    # below the L1 ports it front-ends
+    mem_levels=(
+        MemLevel("l1d", 64 * 2**10, 230e9, 115e9, 2.8e-9),
+        MemLevel("l2", 8 * 2**20 // 12, 200e9, 100e9, 20e-9),
+        MemLevel("hbm2", 8 * 2**30, 64e9, 32e9, 120e-9),
+    ),
     dma_overlap=1.0,                    # loads are pipelined under FMA issue
     op_startup_ns=50.0,
 )
 
 # Fitted by core.calibrate on the actual host; these are fallback defaults.
+# Two derived levels: (vmem = LLC, hbm = DRAM); calibrate fits each level's
+# bandwidth from microbenchmarks that isolate it.
 CPU_HOST = HardwareSpec(
     name="cpu_host",
     peak_flops={"f64": 5e10, "f32": 1e11, "default": 5e10},
@@ -167,6 +251,7 @@ CPU_HOST = HardwareSpec(
     hbm_bytes=16 * 2**30,
     vmem_bytes=32 * 2**20,              # LLC
     vmem_bw=2e11,
+    warm_caches=True,                   # real HW-managed cache hierarchy
     ici_links=1,
     ici_bw_per_link=1e10,
     dma_overlap=0.5,

@@ -1,0 +1,211 @@
+"""Multi-level memory-hierarchy model — the paper's "function expansion".
+
+The RIKEN simulator's accuracy came from expanding gem5's memory system
+into the A64FX's real hierarchy (L1D with asymmetric load/store ports —
+>230 vs >115 GB/s per core — an 8 MiB L2, HBM2) and then tuning each
+level's parameters against the test chip.  This module is that expansion
+at HLO altitude:
+
+* a ``HardwareSpec`` carries an ordered hierarchy of ``MemLevel``s
+  (innermost/fastest first: L1/VMEM -> L2 -> HBM), each with its own
+  capacity, asymmetric read/write bandwidth, and access latency;
+* per-op traffic is *routed* to a level by a reuse-distance/working-set
+  residency model driven by the def-use edges the parser records:
+
+  - **dep reads** (operand has a known producer): the reuse distance is
+    the bytes written to the hierarchy between producer and consumer
+    (prefix sums of per-instance write bytes).  The operand is charged at
+    the innermost level whose capacity covers that distance — data
+    produced "recently enough" is still level-resident.
+  - **cold reads** (parameters, constants) and **writes**: on machines
+    with hardware-managed caches (``warm_caches=True``: the A64FX, the
+    CPU host) they are charged at the innermost level that holds the
+    op's whole working set (read + write bytes) — the steady-state
+    warm-cache rule.  On scratch-memory machines (TPU VMEM is software-
+    managed; weights genuinely stream from HBM every step) they are
+    charged at the outermost level, and only def-use reuse earns
+    inner-level bandwidth.
+
+* reads and writes are split (``OpStat.read_bytes`` / ``write_bytes``),
+  so the asymmetric load/store paths finally matter: a store-heavy op on
+  ``A64FX_CORE`` is slower than its load-heavy mirror, and halving
+  ``hbm_write_bw`` slows store-bound programs.
+
+The router is pure python over already-parsed programs; it knows nothing
+about engines.  ``core.cost`` turns routed traffic into per-op times that
+both the occupancy and the schedule engine consume.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .hlo import OpStat, Program
+
+
+@dataclass(frozen=True)
+class MemLevel:
+    """One level of the hierarchy (the gem5 cache/memobj parameter file)."""
+    name: str
+    capacity: float              # bytes held at this level
+    read_bw: float               # bytes/s toward the core (load path)
+    write_bw: float              # bytes/s away from the core (store path)
+    latency_s: float = 0.0       # access latency, charged once per op
+                                 # at the deepest level the op touches
+
+
+@dataclass
+class MemTraffic:
+    """Per-op routed traffic: bytes and time per hierarchy level.
+
+    Bytes are per *instance* (not multiplied by ``OpStat.count``) and
+    already dtype-normalized (DESIGN.md §7), matching the other per-op
+    time components.
+    """
+    read_by_level: Dict[str, float] = field(default_factory=dict)
+    write_by_level: Dict[str, float] = field(default_factory=dict)
+    t_read: float = 0.0
+    t_write: float = 0.0
+    latency_s: float = 0.0
+
+    @property
+    def t_mem(self) -> float:
+        return self.t_read + self.t_write + self.latency_s
+
+
+def _dtype_scale(op: OpStat, compute_dtype: Optional[str]) -> float:
+    """Inverted XLA:CPU float-normalization (DESIGN.md §7): f32 traffic is
+    costed at 16-bit width when the model computes in bf16/f16."""
+    if compute_dtype in ("bf16", "f16") and op.dtype == "f32":
+        return 0.5
+    return 1.0
+
+
+def _split_rw(op: OpStat, scale: float) -> Tuple[float, float]:
+    """Effective (read, write) bytes.  Synthetic OpStats built with only
+    ``bytes_accessed`` (tests, sweeps) are treated as pure reads, which
+    reproduces the old scalar model exactly."""
+    if op.read_bytes or op.write_bytes:
+        return op.read_bytes * scale, op.write_bytes * scale
+    return op.bytes_accessed * scale, 0.0
+
+
+def residency_level(levels: Sequence[MemLevel], nbytes: float) -> MemLevel:
+    """Innermost level whose capacity covers ``nbytes`` (outermost level
+    backstops everything — there is nowhere further to miss to)."""
+    for lv in levels:
+        if nbytes <= lv.capacity:
+            return lv
+    return levels[-1]
+
+
+def route_standalone(op: OpStat, levels: Sequence[MemLevel],
+                     compute_dtype: Optional[str] = None,
+                     warm_caches: bool = False) -> MemTraffic:
+    """Route one op with no program context: no producer information, so
+    everything takes the cold-read/write rule (working set if the caches
+    are hardware-managed and warm, outermost level otherwise)."""
+    scale = _dtype_scale(op, compute_dtype)
+    rb, wb = _split_rw(op, scale)
+    lv = (residency_level(levels, rb + wb) if warm_caches else levels[-1])
+    tr = MemTraffic()
+    _charge(tr, lv, rb, wb)
+    tr.latency_s = lv.latency_s
+    return tr
+
+
+def _charge(tr: MemTraffic, lv: MemLevel, rb: float, wb: float) -> None:
+    if rb > 0:
+        tr.read_by_level[lv.name] = tr.read_by_level.get(lv.name, 0.0) + rb
+        tr.t_read += rb / lv.read_bw
+    if wb > 0:
+        tr.write_by_level[lv.name] = tr.write_by_level.get(lv.name, 0.0) + wb
+        tr.t_write += wb / lv.write_bw
+
+
+def route_program(prog: Program, levels: Sequence[MemLevel],
+                  compute_dtype: Optional[str] = None,
+                  warm_caches: bool = False) -> List[MemTraffic]:
+    """Route every op's traffic through the hierarchy.
+
+    Reuse distances are computed on the per-iteration op sequence: prefix
+    sums of per-instance write bytes, so an edge from op *j* to op *i* sees
+    the footprint written by ops *j..i-1* (including *j*'s own output —
+    an operand larger than a level can never be resident there).  Edges
+    that cross a collapsed loop body (count > 1) use the single-iteration
+    footprint, a deliberate under-estimate recorded in DESIGN.md §12.
+    """
+    if not levels:
+        raise ValueError("empty memory hierarchy")
+    n = len(prog.ops)
+    scales = [_dtype_scale(o, compute_dtype) for o in prog.ops]
+    # foot[i] = effective bytes written by ops 0..i-1
+    foot = [0.0] * (n + 1)
+    rws = []
+    for i, o in enumerate(prog.ops):
+        rb, wb = _split_rw(o, scales[i])
+        rws.append((rb, wb))
+        foot[i + 1] = foot[i] + wb
+
+    out: List[MemTraffic] = []
+    for i, o in enumerate(prog.ops):
+        rb, wb = rws[i]
+        tr = MemTraffic()
+        # cold-traffic level: warm working-set rule on cache machines,
+        # outermost (HBM/DRAM) on scratch-memory machines
+        cold_level = (residency_level(levels, rb + wb) if warm_caches
+                      else levels[-1])
+        _charge(tr, cold_level, 0.0, wb)
+        deepest = cold_level if wb > 0 else levels[0]
+
+        # dep reads by reuse distance; shares clamped to the read budget
+        # (slice/DUS refinements can make boundary reads smaller than the
+        # nominal operand sizes the edges carry)
+        budget = rb
+        shares = [(j, b * scales[i]) for j, b in zip(o.deps, o.dep_bytes)
+                  if 0 <= j < i and b > 0]
+        total_share = sum(b for _, b in shares)
+        shrink = (budget / total_share) if total_share > budget > 0 else 1.0
+        if budget > 0:
+            for j, b in shares:
+                b = min(b * shrink, budget)
+                if b <= 0:
+                    continue
+                dist = foot[i] - foot[j]
+                lv = residency_level(levels, dist)
+                _charge(tr, lv, b, 0.0)
+                budget -= b
+                if _depth(levels, lv) > _depth(levels, deepest):
+                    deepest = lv
+        # cold reads (parameters/constants)
+        if budget > 0:
+            _charge(tr, cold_level, budget, 0.0)
+            if _depth(levels, cold_level) > _depth(levels, deepest):
+                deepest = cold_level
+        tr.latency_s = deepest.latency_s
+        out.append(tr)
+    return out
+
+
+def _depth(levels: Sequence[MemLevel], lv: MemLevel) -> int:
+    for i, cand in enumerate(levels):
+        if cand.name == lv.name:
+            return i
+    return len(levels)
+
+
+def aggregate_traffic(traffic: Sequence[Optional[MemTraffic]],
+                      counts: Sequence[float]) -> Dict[str, Dict[str, float]]:
+    """Program-level per-level totals (bytes and time, count-multiplied)
+    for the PA report's hierarchy section."""
+    agg: Dict[str, Dict[str, float]] = {}
+    for tr, c in zip(traffic, counts):
+        if tr is None:
+            continue
+        for kind in ("read", "write"):
+            by = tr.read_by_level if kind == "read" else tr.write_by_level
+            for name, b in by.items():
+                a = agg.setdefault(name, {"read_bytes": 0.0,
+                                          "write_bytes": 0.0})
+                a[f"{kind}_bytes"] += b * c
+    return agg

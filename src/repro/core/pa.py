@@ -12,8 +12,7 @@ equivalents:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 from .engine import EngineResult
 from .hlo import Program
@@ -68,6 +67,32 @@ def suggestions(rf: Roofline, eng: EngineResult, prog: Program) -> List[str]:
                        "roofline; gains must come from algorithm (sparsity, "
                        "lower precision).")
     return out
+
+
+def _fmt_bytes(b: float) -> str:
+    if b >= 2**30:
+        return f"{b / 2**30:8.2f} GiB"
+    if b >= 2**20:
+        return f"{b / 2**20:8.2f} MiB"
+    return f"{b / 2**10:8.2f} KiB"
+
+
+def _memory_section(eng: EngineResult) -> List[str]:
+    """Per-level traffic/residency — the paper's cache-hierarchy function
+    expansion made visible: where each op's reads and writes were served."""
+    tot = sum(a["read_bytes"] + a["write_bytes"]
+              for a in eng.traffic_by_level.values())
+    if tot <= 0:
+        return []
+    lines = ["  memory hierarchy (routed traffic | residency):"]
+    for name, a in sorted(eng.traffic_by_level.items(),
+                          key=lambda kv: -(kv[1]["read_bytes"]
+                                           + kv[1]["write_bytes"])):
+        share = (a["read_bytes"] + a["write_bytes"]) / tot
+        lines.append(f"    {name:<6s} read {_fmt_bytes(a['read_bytes'])}  "
+                     f"write {_fmt_bytes(a['write_bytes'])}  "
+                     f"({100 * share:5.1f}% of traffic)")
+    return lines
 
 
 def _schedule_section(sched: ScheduleResult) -> List[str]:
@@ -132,6 +157,7 @@ def pa_report(rf: Roofline, eng: EngineResult, prog: Program,
     for port in ("mxu", "vpu", "mem", "ici"):
         t = eng.port_busy.get(port, 0.0)
         lines.append(f"    {port:<4s} {_fmt_t(t)}  ({100 * t / tot:5.1f}% of est)")
+    lines.extend(_memory_section(eng))
     lines.append("  time by opclass:")
     for cls, t in sorted(eng.by_class_time.items(), key=lambda kv: -kv[1]):
         lines.append(f"    {cls:<16s} {_fmt_t(t)}")

@@ -14,11 +14,9 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict, Optional
 
-from .engine import EngineResult, simulate_program
 from .hlo import Program
-from .hwspec import HardwareSpec, TPU_V5E
+from .hwspec import HardwareSpec
 
 
 @dataclass
@@ -77,9 +75,12 @@ def roofline_from_program(prog: Program, hw: HardwareSpec, n_chips: int,
     f = prog.flops
     b = prog.bytes_normalized(compute_dtype)
     c = prog.comm_normalized(compute_dtype)
+    # memory roof: all traffic streamed from the hierarchy's outermost
+    # level (HBM/DRAM) on the load path — the classic roofline denominator
+    hbm = hw.memory_hierarchy()[-1]
     return Roofline(
         compute_s=f / hw.matmul_flops(compute_dtype),
-        memory_s=b / hw.hbm_read_bw,
+        memory_s=b / hbm.read_bw,
         collective_s=c / hw.ici_bw_per_link,
         flops_per_device=f,
         bytes_per_device=b,

@@ -6,7 +6,8 @@ hide under compute.  This module replaces the assumption with a schedule,
 following gem5's issue/reservation-station design at HLO altitude:
 
 * every costed op is a task on one port (MXU / VPU / DMA-mem / ICI) with a
-  duration from the shared ``engine.cost_op`` model,
+  duration from the shared ``core.cost`` pipeline (hierarchy-routed memory
+  times included),
 * ``parse_program`` supplies def-use edges (``OpStat.deps``), so async-DMA
   and async-collective overlap falls out of the dataflow graph — an op
   waits for its producers, not for program order,
@@ -36,7 +37,7 @@ from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-from .engine import OpTime, cost_op
+from .cost import OpTime, cost_program
 from .hlo import OpStat, Program
 from .hwspec import HardwareSpec
 
@@ -98,11 +99,12 @@ def _duration(ot: OpTime, hw: HardwareSpec) -> float:
 
 def schedule_program(prog: Program, hw: HardwareSpec,
                      links_per_collective: int = 2,
-                     compute_dtype: Optional[str] = None) -> ScheduleResult:
-    ici_bw = links_per_collective * hw.ici_bw_per_link
+                     compute_dtype: Optional[str] = None,
+                     costed: Optional[List[Optional[OpTime]]] = None
+                     ) -> ScheduleResult:
     n = len(prog.ops)
-    costed: List[Optional[OpTime]] = [
-        cost_op(o, hw, ici_bw, compute_dtype) for o in prog.ops]
+    if costed is None:
+        costed = cost_program(prog, hw, links_per_collective, compute_dtype)
 
     widths = hw.issue_width
     depths = hw.queue_depth

@@ -11,11 +11,11 @@ execution-cycle estimate + PA data, before the target hardware exists.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 from dataclasses import dataclass
 from typing import Any, Dict, Optional
 
+from .cost import cost_program
 from .engine import EngineResult, simulate_program
 from .hlo import Program, parse_program
 from .hwspec import HardwareSpec, TPU_V5E
@@ -64,6 +64,7 @@ class SimReport:
                 "collective_time_by_kind": self.engine.collective_time_by_kind,
                 "n_ops": self.engine.n_ops,
                 "mxu_utilization": self.engine.mxu_utilization,
+                "traffic_by_level": self.engine.traffic_by_level,
             },
             "program": self.program_summary,
             "xla_cost_analysis": self.xla_cost_analysis,
@@ -139,8 +140,12 @@ def simulate(compiled, hw: HardwareSpec = TPU_V5E, n_chips: int = 1,
         cost = _cost_stats(compiled)
         mem = _mem_stats(compiled)
     prog = parse_program(text)
-    eng = simulate_program(prog, hw, compute_dtype=compute_dtype)
-    sched = (schedule_program(prog, hw, compute_dtype=compute_dtype)
+    # one costing pass (hierarchy routing included); both engines share it
+    costed = cost_program(prog, hw, compute_dtype=compute_dtype)
+    eng = simulate_program(prog, hw, compute_dtype=compute_dtype,
+                           costed=costed)
+    sched = (schedule_program(prog, hw, compute_dtype=compute_dtype,
+                              costed=costed)
              if engine in ("schedule", "both") else None)
     rf = roofline_from_program(prog, hw, n_chips, model_flops_global,
                                compute_dtype)

@@ -12,7 +12,7 @@ import contextlib
 import json
 import time
 from collections import defaultdict
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 
 class Stats:

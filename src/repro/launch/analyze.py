@@ -12,9 +12,7 @@ a compiled (arch x shape x mesh) cell.
 import argparse
 import collections
 
-from ..core.hlo import parse_program
 from ..core.hwspec import TPU_V5E
-from ..core.engine import simulate_program
 from ..core.simulate import simulate
 from ..configs import ARCHS, SHAPES
 from .cell import build_cell, model_flops_for
@@ -45,12 +43,13 @@ def main() -> int:
             f.write(text)
         print(f"wrote {len(text)} chars of HLO to {args.dump_hlo}")
 
-    prog = parse_program(text)
-    eng = simulate_program(prog, TPU_V5E)
     mf = model_flops_for(ARCHS[args.arch], SHAPES[args.shape])
+    # one simulate() call: the report carries the parsed program and the
+    # engine result, so the deep-dive below reuses the single costing pass
     rep = simulate(compiled, hw=TPU_V5E, n_chips=n_chips(mesh),
                    model_flops_global=mf,
                    title=f"{args.arch} {args.shape}")
+    prog, eng = rep.program, rep.engine
     print(rep.pa)
     print(f"\nmemory_analysis: {rep.memory_analysis}")
 

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +24,6 @@ from ..models.lm import LM, build_model
 from ..parallel.sharding import MeshRules, make_rules
 from ..serve.engine import make_decode_step, make_prefill_step
 from ..serve.kvcache import cache_abstract, cache_shardings
-from ..train.optimizer import OptConfig, state_spec_tree
 from ..train.trainer import make_train_step
 
 

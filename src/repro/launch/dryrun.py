@@ -26,7 +26,6 @@ import time
 import traceback
 from pathlib import Path
 
-import jax
 
 from ..configs import ARCHS, SHAPES, skipped_shapes_for
 from ..core.hwspec import TPU_V5E

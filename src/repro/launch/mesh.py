@@ -19,7 +19,6 @@ axes and never name mesh sizes.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
 
 import jax
 from jax.sharding import Mesh

@@ -11,9 +11,7 @@ data — at a width that runs on the container.  The same driver drives the
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
-from functools import partial
 from typing import Any, Dict, Optional
 
 import jax
@@ -25,7 +23,6 @@ from ..data.synthetic import SyntheticLMDataset
 from ..models import params as pr
 from ..models.lm import LM, build_model
 from ..parallel.sharding import make_rules
-from ..train import checkpoint as ckpt_lib
 from ..train import fault
 from ..train.trainer import make_train_step
 from .mesh import make_host_mesh

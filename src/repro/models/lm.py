@@ -36,7 +36,7 @@ from .layers import (
 )
 from .moe import apply_moe, moe_params
 from .params import P
-from .ssm import apply_mamba, init_mamba_cache, mamba_params
+from .ssm import apply_mamba, mamba_params
 
 
 def stack_specs(tree, n: int):

@@ -11,15 +11,13 @@ per-request stop handling.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from ..configs.base import ModelConfig, ShapeConfig
+from ..configs.base import ShapeConfig
 from ..models import params as pr
 from ..models.lm import LM
 from ..parallel.sharding import MeshRules, use_rules

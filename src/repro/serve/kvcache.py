@@ -11,7 +11,6 @@ cache itself.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax.numpy as jnp
 

@@ -15,7 +15,6 @@ collective-byte cut on the pod axis (visible in the dry-run HLO).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -12,12 +12,10 @@ across the 'pod' axis (grad_compress.compressed_pod_sync).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec
 
 from ..configs.base import RunConfig
 from ..models import params as pr

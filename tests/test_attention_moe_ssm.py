@@ -1,5 +1,4 @@
 """Model-substrate numerics: attention paths, MoE routing, SSD modes."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +14,7 @@ from repro.models.attention import (blocked_attention, decode_attention,
 from repro.models.moe import apply_moe, capacity, moe_params
 from repro.models import params as pr
 from repro.models.layers import apply_mlp
-from repro.models.ssm import apply_mamba, init_mamba_cache
+from repro.models.ssm import apply_mamba
 
 
 # ---------------------------------------------------------------- attention

@@ -1,6 +1,5 @@
 """Fault-tolerance substrate: atomic checkpoints, resume, elastic reshard,
 retry-from-checkpoint loop, straggler watchdog, injected failures."""
-import os
 import shutil
 
 import jax

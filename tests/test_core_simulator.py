@@ -205,7 +205,12 @@ def test_property_collective_factor_monotone_in_group_size(g1, g2):
        g=st.integers(min_value=2, max_value=256))
 def test_property_bf16_denormalization_halves_f32_traffic(b, payload, g):
     """compute_dtype='bf16' must cost f32 bytes AND collective payloads at
-    half width (the inverted XLA:CPU float-normalization, DESIGN.md §7)."""
+    half width (the inverted XLA:CPU float-normalization, DESIGN.md §7).
+
+    Exact 2x halving holds because TPU_V5E is a scratch-memory spec
+    (warm_caches=False): cold traffic always routes to HBM, so full- and
+    half-width bytes see the same bandwidth at every size (hierarchy
+    routing itself is pinned by tests/test_memory_hierarchy.py)."""
     ew = _mk_op(opclass="elementwise", opcode="add", dtype="f32",
                 flops=0.0, bytes_accessed=b, dot_dims=None)
     coll = _mk_op(name="ar", opclass="collective", opcode="all-reduce",

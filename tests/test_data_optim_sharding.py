@@ -158,7 +158,6 @@ def test_pod_axis_prefix_fallback():
 def test_rules_cover_all_logical_axes():
     from repro.configs import ARCHS
     from repro.models.lm import build_model
-    from repro.models import params as pr
     for cfg in ARCHS.values():
         model = build_model(cfg)
         for leaf in jax.tree.leaves(model.param_specs(),

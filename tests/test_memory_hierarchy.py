@@ -1,0 +1,255 @@
+"""Tests for the multi-level memory-hierarchy model and the unified cost
+pipeline (ISSUE 2): reuse-distance routing, read/write asymmetry, residency
+monotonicity, single-pass costing for engine="both", and the preserved
+schedule-engine sandwich invariant under the new cost layer.
+"""
+import pytest
+
+from repro.core.engine import simulate_program
+from repro.core.hlo import OpStat, Program, parse_program
+from repro.core.hwspec import (A64FX_CMG, A64FX_CORE, CPU_HOST, SPECS,
+                               TPU_V5E)
+from repro.core.cost import cost_program
+from repro.core.memory import MemLevel, residency_level, route_program
+from repro.core.schedule import schedule_program
+from repro.core.simulate import simulate
+
+CHAIN_HLO = """
+HloModule chain, num_partitions=1
+
+ENTRY %main (p0: f32[4096,4096]) -> f32[4096,4096] {
+  %p0 = f32[4096,4096] parameter(0)
+  %dot = f32[4096,4096] dot(%p0, %p0), lhs_contracting_dims={1}
+  %e = f32[4096,4096] exponential(%dot)
+  %dot2 = f32[4096,4096] dot(%e, %e), lhs_contracting_dims={1}
+  ROOT %neg = f32[4096,4096] negate(%dot2)
+}
+"""
+
+INDEP_HLO = """
+HloModule indep, num_partitions=1
+
+ENTRY %main (p0: f32[4096,4096], p1: f32[134217728]) -> (f32[4096,4096], f32[134217728]) {
+  %p0 = f32[4096,4096] parameter(0)
+  %p1 = f32[134217728] parameter(1)
+  %big = f32[134217728] copy(%p1)
+  %dot = f32[4096,4096] dot(%p0, %p0), lhs_contracting_dims={1}
+  ROOT %t = (f32[4096,4096], f32[134217728]) tuple(%dot, %big)
+}
+"""
+
+MIB = float(2**20)
+
+
+def _data_op(name, rd, wr, deps=(), dep_bytes=()):
+    return OpStat(name, "copy", "data", "f32", bytes_accessed=rd + wr,
+                  read_bytes=rd, write_bytes=wr, deps=list(deps),
+                  dep_bytes=list(dep_bytes))
+
+
+# ------------------------------------------------- satellite: bound_by fix
+def test_empty_program_bound_by_is_mem():
+    """EngineResult.bound_by used to raise ValueError (max over an empty
+    port_busy dict) — it must match ScheduleResult.bound_by's fallback."""
+    prog = Program(ops=[], entry="e", n_partitions=1)
+    eng = simulate_program(prog, TPU_V5E)
+    sched = schedule_program(prog, TPU_V5E)
+    assert eng.bound_by == "mem"
+    assert sched.bound_by == "mem"
+    assert eng.t_est == 0.0
+
+
+# ------------------------------------------------------- hierarchy routing
+def test_parser_records_dep_bytes():
+    prog = parse_program(CHAIN_HLO)
+    by_name = {o.name: o for o in prog.ops}
+    assert by_name["e"].dep_bytes == [4096 * 4096 * 4.0]
+    assert len(by_name["neg"].deps) == len(by_name["neg"].dep_bytes) == 1
+    # read/write split covers the old aggregate
+    for o in prog.ops:
+        assert o.read_bytes + o.write_bytes == pytest.approx(o.bytes_accessed)
+
+
+def test_residency_level_picks_innermost_fit():
+    levels = TPU_V5E.memory_hierarchy()
+    assert residency_level(levels, 1024).name == "vmem"
+    assert residency_level(levels, 1e9).name == "hbm"
+    # over-capacity traffic backstops at the outermost level
+    assert residency_level(levels, 1e15).name == "hbm"
+
+
+def test_reuse_distance_routes_recent_producer_to_inner_level():
+    """An operand produced just before its consumer is VMEM-resident; the
+    same edge with a gigabyte of intervening writes has fallen to HBM."""
+    producer = _data_op("w", 0.0, 64 * MIB)
+    near = _data_op("r", 64 * MIB, MIB, deps=[0], dep_bytes=[64 * MIB])
+    filler = _data_op("f", 0.0, 1024 * MIB)
+    far = _data_op("r2", 64 * MIB, MIB, deps=[0], dep_bytes=[64 * MIB])
+
+    tr_near = route_program(Program([producer, near], "e", 1),
+                            TPU_V5E.memory_hierarchy())
+    tr_far = route_program(Program([producer, filler, far], "e", 1),
+                           TPU_V5E.memory_hierarchy())
+    assert tr_near[1].read_by_level == {"vmem": 64 * MIB}
+    assert tr_far[2].read_by_level == {"hbm": 64 * MIB}
+    assert tr_far[2].t_read > tr_near[1].t_read
+
+
+def test_residency_monotonic_shrinking_l2_never_speeds_up():
+    """Satellite: shrinking the mid level monotonically (weakly) increases
+    t_est for BOTH engines."""
+    base_levels = lambda cap: (                                 # noqa: E731
+        MemLevel("l1", 64 * 2**10, 4e11, 2e11),
+        MemLevel("l2", cap, 1e11, 5e10),
+        MemLevel("hbm", 16 * 2**30, 2e10, 1e10),
+    )
+    prog = parse_program(CHAIN_HLO)
+    synth = Program(
+        [_data_op("w", 0.0, 4 * MIB),
+         _data_op("r", 4 * MIB, 4 * MIB, deps=[0], dep_bytes=[4 * MIB]),
+         _data_op("r2", 8 * MIB, 2 * MIB, deps=[1], dep_bytes=[4 * MIB])],
+        "e", 1)
+    for p in (prog, synth):
+        prev_occ = prev_sched = 0.0
+        for cap in (64 * MIB, 8 * MIB, 2 * MIB, 64 * 2**10):
+            hw = TPU_V5E.with_(vmem_bytes=64 * 2**10, vmem_bw=4e11,
+                               hbm_read_bw=2e10, hbm_write_bw=1e10,
+                               mem_levels=base_levels(cap),
+                               warm_caches=True)
+            occ = simulate_program(p, hw).t_est
+            sched = schedule_program(p, hw).t_est
+            assert occ >= prev_occ - 1e-15
+            assert sched >= prev_sched - 1e-15
+            prev_occ, prev_sched = occ, sched
+
+
+def test_a64fx_core_store_heavy_slower_than_load_heavy_mirror():
+    """Satellite: the paper's asymmetric L1 ports (load >230, store >115
+    GB/s per core) — mirroring reads<->writes must slow the store-heavy op
+    at EVERY level of the A64FX_CORE hierarchy."""
+    for total in (48 * 2**10, 4 * MIB, 512 * MIB):   # L1-, L2-, HBM-resident
+        loads = Program([_data_op("l", 0.75 * total, 0.25 * total)], "e", 1)
+        stores = Program([_data_op("s", 0.25 * total, 0.75 * total)], "e", 1)
+        t_load = simulate_program(loads, A64FX_CORE).t_est
+        t_store = simulate_program(stores, A64FX_CORE).t_est
+        assert t_store > t_load
+
+
+def test_hbm_write_bw_affects_estimate():
+    """Acceptance: halving hbm_write_bw on a store-heavy program increases
+    the estimate — on a derived hierarchy (TPU) AND on an explicit
+    mem_levels hierarchy (A64FX), where with_() rewrites the outer level."""
+    store_heavy = Program([_data_op("s", 1e6, 1e9)], "e", 1)
+    for hw in (TPU_V5E, A64FX_CMG):
+        halved = hw.with_(hbm_write_bw=hw.hbm_write_bw / 2)
+        t0 = simulate_program(store_heavy, hw).t_est
+        t1 = simulate_program(store_heavy, halved).t_est
+        assert t1 > t0
+        s0 = schedule_program(store_heavy, hw).t_est
+        s1 = schedule_program(store_heavy, halved).t_est
+        assert s1 > s0
+
+
+def test_cache_model_flag_is_gone():
+    for hw in SPECS.values():
+        assert not hasattr(hw, "cache_model")
+
+
+def test_all_specs_have_monotone_hierarchies():
+    """The §12 contract: per-path bandwidths never increase outward, and
+    capacities grow outward — otherwise falling out of a level could
+    speed an op up."""
+    for hw in SPECS.values():
+        levels = hw.memory_hierarchy()
+        for a, b in zip(levels, levels[1:]):
+            assert a.read_bw >= b.read_bw, (hw.name, a.name, b.name)
+            assert a.write_bw >= b.write_bw, (hw.name, a.name, b.name)
+            assert a.capacity <= b.capacity, (hw.name, a.name, b.name)
+
+
+def test_with_preserves_l1_load_store_asymmetry():
+    """Regression: with_() on a scalar must rewrite ONLY the matching
+    level fields — shrinking L1 capacity must not flatten the 230/115
+    load/store ports back to the symmetric vmem_bw scalar (which would
+    make a store-heavy program FASTER after shrinking the cache)."""
+    shrunk = A64FX_CORE.with_(vmem_bytes=32 * 2**10)
+    l1 = shrunk.memory_hierarchy()[0]
+    assert l1.capacity == 32 * 2**10
+    assert l1.read_bw == 230e9 and l1.write_bw == 115e9
+    store_heavy = Program([_data_op("s", 12 * 2**10, 36 * 2**10)], "e", 1)
+    assert simulate_program(store_heavy, shrunk).t_est \
+        >= simulate_program(store_heavy, A64FX_CORE).t_est - 1e-15
+
+
+def test_tpu_cold_reads_stream_from_hbm():
+    """Regression: TPU VMEM is software-managed scratch, not a warm cache
+    — a VMEM-sized op with no producers must still be charged at HBM
+    bandwidth (weights stream from HBM every step); only CPU/A64FX
+    (warm_caches=True) apply the working-set rule to cold traffic."""
+    assert not TPU_V5E.warm_caches and CPU_HOST.warm_caches
+    op = _data_op("w", 100 * MIB, 0.0)            # fits 128 MiB VMEM
+    eng = simulate_program(Program([op], "e", 1), TPU_V5E)
+    assert eng.traffic_by_level == {"hbm": {"read_bytes": 100 * MIB,
+                                            "write_bytes": 0.0}}
+    assert eng.port_busy["mem"] == pytest.approx(
+        100 * MIB / TPU_V5E.hbm_read_bw, rel=1e-9)
+    # the same op on the warm-cache host routes to the level it fits
+    small = _data_op("w", 8 * MIB, 0.0)           # fits the 32 MiB LLC
+    eng_cpu = simulate_program(Program([small], "e", 1), CPU_HOST)
+    assert list(eng_cpu.traffic_by_level) == ["vmem"]
+
+
+# ------------------------------------------- unified cost pipeline sharing
+def test_simulate_both_costs_each_op_exactly_once(monkeypatch):
+    """Satellite: engine="both" must not double-cost the program; both
+    engines consume one shared costed list and agree on serial time."""
+    import repro.core.cost as cost_mod
+    calls = {"n": 0}
+    real = cost_mod.cost_op
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(cost_mod, "cost_op", counting)
+    rep = simulate(INDEP_HLO, hw=TPU_V5E, engine="both")
+    assert calls["n"] == len(rep.program.ops)
+    assert rep.schedule is not None
+    # parity: the two engines saw identical per-op costs
+    assert rep.schedule.t_serial == pytest.approx(rep.engine.t_serial,
+                                                  rel=1e-9)
+    assert rep.schedule.n_ops == rep.engine.n_ops
+
+
+def test_shared_costed_list_matches_fresh_costing():
+    prog = parse_program(CHAIN_HLO)
+    costed = cost_program(prog, TPU_V5E)
+    assert schedule_program(prog, TPU_V5E, costed=costed).t_est \
+        == pytest.approx(schedule_program(prog, TPU_V5E).t_est, rel=1e-12)
+    assert simulate_program(prog, TPU_V5E, costed=costed).t_est \
+        == pytest.approx(simulate_program(prog, TPU_V5E).t_est, rel=1e-12)
+
+
+# --------------------------------------------------- invariants + reporting
+def test_sandwich_invariant_under_hierarchy_cost_layer():
+    """t_roofline <= t_est(schedule) <= t_serial survives the new cost
+    layer on every parameter file."""
+    for hlo in (CHAIN_HLO, INDEP_HLO):
+        prog = parse_program(hlo)
+        for hw in (TPU_V5E, A64FX_CMG, A64FX_CORE, CPU_HOST):
+            r = schedule_program(prog, hw)
+            assert r.t_roofline <= r.t_est * (1 + 1e-9)
+            assert r.t_est <= r.t_serial * (1 + 1e-9)
+
+
+def test_pa_report_has_per_level_traffic_section():
+    rep = simulate(INDEP_HLO, hw=TPU_V5E, engine="both")
+    assert "memory hierarchy (routed traffic | residency)" in rep.pa
+    assert "hbm" in rep.pa
+    # engine result carries the aggregated per-level bytes
+    total = sum(a["read_bytes"] + a["write_bytes"]
+                for a in rep.engine.traffic_by_level.values())
+    assert total > 0
+    import json
+    d = json.loads(rep.to_json())
+    assert d["engine"]["traffic_by_level"]
