@@ -28,33 +28,83 @@ from repro.configs.a64fx_kernelsuite import (
     KERNELS, PAPER_MEAN_ABS_DIFF_PCT, PAPER_MEAN_DIFF_PCT,
     PAPER_STD_DIFF_PCT, PAPER_WITHIN_10PCT_FRACTION)
 from repro.core import calibrate
+from repro.core.compiled import O3Knobs, compile_program, schedule_arrays, \
+    schedule_batch
 from repro.core.cost import cost_program
 from repro.core.hwspec import A64FX_CORE, HardwareSpec
-from repro.core.schedule import schedule_program
+from repro.core.schedule import schedule_reference
 from repro.core.simulate import simulate
 
 OUT = Path("experiments/bench")
 BENCH_JSON = Path("BENCH_kernel_suite.json")
 
 
+def _default_grid(hw: HardwareSpec) -> O3Knobs:
+    return O3Knobs.from_grid(hw, [(w, mw, vw, qd)
+                                  for w in calibrate.O3_WINDOWS
+                                  for mw in calibrate.O3_MEM_WIDTHS
+                                  for vw in calibrate.O3_VPU_WIDTHS
+                                  for qd in calibrate.O3_QUEUE_DEPTHS])
+
+
 def scheduler_throughput(table: calibrate.AccuracyTable,
                          hw: HardwareSpec, min_wall_s: float = 0.2) -> dict:
-    """Wall-clock throughput of the O3 list scheduler over the suite's
-    parsed programs (pure python, no jax): the perf number to track as the
-    scheduling engine grows.  Programs are costed OUTSIDE the timed loop
-    so the metric isolates the scheduler from the cost pipeline."""
+    """Wall-clock throughput of the O3 scheduler over the suite's parsed
+    programs (pure python/numpy, no jax): the perf number to track as the
+    scheduling engine grows.  Programs are compiled to array form OUTSIDE
+    the timed loops so the metric isolates the scheduler from the cost
+    pipeline.
+
+    Three numbers, one hot path: the headline ``ops_per_s`` is the
+    compiled BATCHED kernel driving the full default O3 knob grid (the
+    sweep engine's inner loop — every combo counts as scheduling the
+    program once, because it is); ``single_ops_per_s`` is the compiled
+    scalar kernel one knob set at a time; ``reference_ops_per_s`` is the
+    per-op interpreter the differential tests pin both against."""
+    compiled = [compile_program(p, hw, compute_dtype="f64")
+                for p in table.programs]
+    knobs = _default_grid(hw)
+
+    def timed(fn, per_round: int) -> dict:
+        n_ops = rounds = 0
+        t0 = time.perf_counter()
+        while time.perf_counter() - t0 < min_wall_s:
+            fn()
+            n_ops += per_round
+            rounds += 1
+        wall = time.perf_counter() - t0
+        return {"scheduled_ops": n_ops, "rounds": rounds, "wall_s": wall,
+                "ops_per_s": n_ops / wall if wall > 0 else 0.0}
+
+    suite_ops = sum(len(p.ops) for p in table.programs)
+
+    def batched():
+        for cp in compiled:
+            schedule_batch(cp, knobs)
+
+    def single():
+        for cp in compiled:
+            schedule_arrays(cp, hw)
+
+    # reference interpreter with precomputed costed lists (the PR-2 metric)
     costed = [cost_program(p, hw, compute_dtype="f64")
               for p in table.programs]
-    n_ops = rounds = 0
-    t0 = time.perf_counter()
-    while time.perf_counter() - t0 < min_wall_s:
+
+    def reference():
         for prog, ops in zip(table.programs, costed):
-            schedule_program(prog, hw, costed=ops)
-            n_ops += len(prog.ops)
-        rounds += 1
-    wall = time.perf_counter() - t0
-    return {"scheduled_ops": n_ops, "rounds": rounds, "wall_s": wall,
-            "ops_per_s": n_ops / wall if wall > 0 else 0.0}
+            schedule_reference(prog, hw, costed=ops)
+
+    res = timed(batched, suite_ops * knobs.batch)
+    res["mode"] = "compiled_batched_o3_grid"
+    res["grid_combos"] = knobs.batch
+    # UNIT CHANGE vs the PR-2 number (75,143, single interpreter passes):
+    # every grid combo counts as one schedule of the program — which it
+    # is, bit-identically.  The like-for-like single-schedule trajectory
+    # continues under single_ops_per_s / reference_ops_per_s below.
+    res["pr2_baseline_single_ops_per_s"] = 75143.0
+    res["single_ops_per_s"] = timed(single, suite_ops)["ops_per_s"]
+    res["reference_ops_per_s"] = timed(reference, suite_ops)["ops_per_s"]
+    return res
 
 
 def a64fx_cycles_per_8elem(kernel_name: str, n: int) -> float:
@@ -104,14 +154,42 @@ def main(argv=None) -> int:
           f"({thr['scheduled_ops']} ops in {thr['wall_s'] * 1e3:.0f} ms) ==")
 
     sweep = None
+    sweep_timing = None
     if args.sweep_o3:
         print("\n== O3 resource-knob sweep (paper §4: OoO parameter "
-              "tuning, fitted against the test chip) ==")
+              "tuning, fitted against the test chip; batched array "
+              "kernel) ==")
+        t0 = time.perf_counter()
         sweep = calibrate.sweep_o3(table, hw)
+        t_new = time.perf_counter() - t0
         print(sweep.report())
         b = sweep.results[0]
         print(f"  tuned: window={b['inflight_window']} "
-              f"mem_width={b['mem_issue_width']} qdepth={b['queue_depth']}")
+              f"mem_width={b['mem_issue_width']} "
+              f"vpu_width={b['vpu_issue_width']} qdepth={b['queue_depth']}")
+        # wall-cost comparison vs the PR-2 sweep: the OLD 4x3x3 grid run
+        # serially through the reference interpreter
+        old_specs = [calibrate._knob_spec(hw, w, mw, 1, qd)
+                     for w in (4, 16, 64, 256)
+                     for mw in calibrate.O3_MEM_WIDTHS
+                     for qd in calibrate.O3_QUEUE_DEPTHS]
+        costed = [cost_program(p, hw, compute_dtype="f64")
+                  for p in table.programs]
+        t0 = time.perf_counter()
+        for cand in old_specs:
+            for prog, ops in zip(table.programs, costed):
+                schedule_reference(prog, cand, compute_dtype="f64",
+                                   costed=ops)
+        t_old = time.perf_counter() - t0
+        sweep_timing = {
+            "combos": len(sweep.results), "wall_s": t_new,
+            "old_combos": len(old_specs), "old_wall_s": t_old,
+            "speedup_vs_old_grid": t_old / t_new if t_new > 0 else 0.0,
+        }
+        print(f"  wall: {len(sweep.results)} combos batched in "
+              f"{t_new * 1e3:.1f} ms vs old {len(old_specs)}-combo serial "
+              f"grid {t_old * 1e3:.1f} ms "
+              f"({sweep_timing['speedup_vs_old_grid']:.1f}x)")
 
     print("\n== simulated A64FX single-core throughput "
           "(Fig. 3 bars; cycles / 8-element op) ==")
@@ -130,6 +208,7 @@ def main(argv=None) -> int:
                   "simulated_sched_us": r.simulated_sched_us,
                   "sched_diff_pct": r.sched_diff_pct} for r in table.rows],
         "o3_sweep": sweep.results if sweep is not None else None,
+        "o3_sweep_timing": sweep_timing,
         "summary": {
             "mean_diff_pct": table.mean_diff,
             "std_diff_pct": table.std_diff,

@@ -1,0 +1,120 @@
+"""Scheduler perf-smoke: the compiled kernels on a synthetic 10k-op DAG.
+
+CI runs this on every push (no jax, no calibration — pure python/numpy,
+seconds of wall time), writes ``BENCH_sched_throughput.json``, uploads it
+as an artifact, and FAILS the build when the fast scalar kernel drops
+below the floor.  The floor starts at 2x the PR-2 interpreter baseline
+(75,143 ops/s on the kernel-suite bench); ratchet it as the engine gets
+faster.
+
+Usage:  PYTHONPATH=src python -m benchmarks.sched_throughput [--floor N]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import time
+from pathlib import Path
+
+from repro.core.compiled import O3Knobs, compile_program, schedule_arrays, \
+    schedule_batch
+from repro.core.cost import cost_program
+from repro.core.hlo import OpStat, Program
+from repro.core.hwspec import CPU_HOST
+from repro.core.schedule import schedule_reference
+
+BENCH_JSON = Path("BENCH_sched_throughput.json")
+FLOOR_OPS_PER_S = 150_000        # 2x the PR-2 baseline of 75,143
+N_OPS = 10_000
+
+
+def synthetic_program(n: int = N_OPS, seed: int = 0) -> Program:
+    """Deterministic random DAG with kernel-suite-like op mix: mostly
+    short-range def-use edges (XLA programs are locally dense), a mix of
+    ports, and occasional collapsed-loop counts."""
+    rng = random.Random(seed)
+    ops = []
+    for i in range(n):
+        k = min(i, rng.randint(0, 3))
+        lo = max(0, i - 64)
+        deps = sorted(rng.sample(range(lo, i), min(k, i - lo)))
+        cls = rng.choice(["elementwise", "elementwise", "data", "matmul",
+                          "reduce", "transcendental"])
+        ops.append(OpStat(
+            f"op{i}", "fusion", cls, "f32",
+            flops=rng.uniform(1e3, 1e9),
+            transcendentals=rng.uniform(0, 1e3),
+            bytes_accessed=rng.uniform(1e3, 1e8),
+            read_bytes=rng.uniform(1e3, 5e7),
+            write_bytes=rng.uniform(0, 5e7),
+            count=rng.choice([1.0, 1.0, 1.0, 4.0]),
+            deps=deps, dep_bytes=[rng.uniform(0, 1e6) for _ in deps]))
+    return Program(ops=ops, entry="synthetic", n_partitions=1)
+
+
+def _timed(fn, ops_per_round: int, min_wall_s: float) -> dict:
+    fn()                                     # warm (allocations, caches)
+    n_ops = rounds = 0
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < min_wall_s:
+        fn()
+        n_ops += ops_per_round
+        rounds += 1
+    wall = time.perf_counter() - t0
+    return {"scheduled_ops": n_ops, "rounds": rounds, "wall_s": wall,
+            "ops_per_s": n_ops / wall if wall > 0 else 0.0}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--floor", type=float, default=FLOOR_OPS_PER_S,
+                    help="fail if fast-kernel ops/s drops below this")
+    ap.add_argument("--min-wall-s", type=float, default=1.0)
+    args = ap.parse_args(argv)
+
+    hw = CPU_HOST
+    prog = synthetic_program()
+    t0 = time.perf_counter()
+    costed = cost_program(prog, hw, compute_dtype="f64")
+    t_cost = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    cp = compile_program(prog, hw, compute_dtype="f64", costed=costed)
+    t_compile = time.perf_counter() - t0
+
+    fast = _timed(lambda: schedule_arrays(cp, hw), cp.n, args.min_wall_s)
+    grid = O3Knobs.from_grid(hw, [(w, mw, 1, qd)
+                                  for w in (16, 256, 1024)
+                                  for mw in (1, 4) for qd in (4, 64)])
+    batched = _timed(lambda: schedule_batch(cp, grid),
+                     cp.n * grid.batch, args.min_wall_s)
+    ref = _timed(lambda: schedule_reference(prog, hw, costed=costed),
+                 cp.n, args.min_wall_s)
+
+    out = {
+        "program": {"n_ops": cp.n, "n_edges": cp.n_edges, "seed": 0},
+        "cost_program_s": t_cost,
+        "compile_program_s": t_compile,
+        "fast_kernel": fast,
+        "batched_kernel": {**batched, "grid_combos": grid.batch},
+        "reference_interpreter": ref,
+        "speedup_fast_vs_reference":
+            fast["ops_per_s"] / max(ref["ops_per_s"], 1e-9),
+        "floor_ops_per_s": args.floor,
+    }
+    BENCH_JSON.write_text(json.dumps(out, indent=1))
+    print(f"fast kernel:      {fast['ops_per_s']:>12,.0f} ops/s")
+    print(f"batched kernel:   {batched['ops_per_s']:>12,.0f} ops/s "
+          f"({grid.batch} combos)")
+    print(f"reference interp: {ref['ops_per_s']:>12,.0f} ops/s")
+    print(f"wrote {BENCH_JSON}")
+    if fast["ops_per_s"] < args.floor:
+        print(f"FAIL: fast kernel {fast['ops_per_s']:,.0f} ops/s is below "
+              f"the floor of {args.floor:,.0f}")
+        return 1
+    print(f"OK: above the {args.floor:,.0f} ops/s floor")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -32,10 +32,8 @@ from jax.experimental import enable_x64 as jax_enable_x64
 from ..configs.a64fx_kernelsuite import KERNELS, Kernel
 from ..kernels import ref as kref
 from ..kernels.stream import EXPRS, _DTYPES
-from .cost import cost_program
 from .hlo import Program
 from .hwspec import CPU_HOST, HardwareSpec
-from .schedule import schedule_program
 from .simulate import simulate
 
 SIZE_SCALE = 1024     # paper: iter/1000; here: n x1024 (see module docstring)
@@ -306,54 +304,65 @@ def kernel_accuracy_table(hw: Optional[HardwareSpec] = None,
 # Sweep grid for the schedule engine's resource knobs — the paper's
 # "detailed parameter tuning of out-of-order resources" (§4), fitted
 # against the test chip instead of taken from Fujitsu's NDA tables.
-O3_WINDOWS = (4, 16, 64, 256)
+# The batched array kernel made scheduling ~free, so the default grid is
+# 2.5x the old 4x3x3 one (ROB windows up to 1024, per-port VPU widths)
+# at a fraction of its wall cost.
+O3_WINDOWS = (4, 16, 64, 256, 1024)
 O3_MEM_WIDTHS = (1, 2, 4)
+O3_VPU_WIDTHS = (1, 2)
 O3_QUEUE_DEPTHS = (4, 16, 64)
+
+
+def _knob_spec(hw: HardwareSpec, w: int, mw: int, vw: int,
+               qd: int) -> HardwareSpec:
+    return hw.with_(
+        inflight_window=w,
+        issue_width={**hw.issue_width, "mem": mw, "vpu": vw},
+        queue_depth={p: qd for p in ("mxu", "vpu", "mem", "ici")})
 
 
 def sweep_o3(table: AccuracyTable, hw: HardwareSpec,
              windows=O3_WINDOWS, mem_widths=O3_MEM_WIDTHS,
-             queue_depths=O3_QUEUE_DEPTHS,
-             compute_dtype: str = "f64") -> "O3Sweep":
+             queue_depths=O3_QUEUE_DEPTHS, vpu_widths=O3_VPU_WIDTHS,
+             compute_dtype: str = "f64", backend: str = "numpy") -> "O3Sweep":
     """Re-schedule already-measured programs under each knob combination
-    (pure python — no re-measurement, no recompilation) and rank combos by
-    mean |diff| of the schedule engine vs the measured wall times.
+    (no re-measurement, no recompilation) and rank combos by mean |diff|
+    of the schedule engine vs the measured wall times.
+
+    The whole grid runs BATCHED (``core.compiled.schedule_batch``): each
+    program is compiled once to array form, shared across every combo, and
+    one sequential pass per program advances all combos in lockstep — the
+    knob grid is a vector axis, not a python loop.  ``backend="jax"``
+    runs the same pass as a jit-ed ``lax.scan`` on the accelerator.
 
     Requires a table built with ``keep_programs=True``."""
+    from .compiled import O3Knobs, compile_program, schedule_batch
     if not table.programs:
         raise ValueError("sweep_o3 needs kernel_accuracy_table("
                          "keep_programs=True)")
-    # per-op costs are independent of the O3 knobs: cost each program ONCE
-    # and re-schedule the shared costed lists across the whole grid
-    costed = [cost_program(p, hw, compute_dtype=compute_dtype)
-              for p in table.programs]
+    import numpy as np
+    combos = [(w, mw, vw, qd) for w in windows for mw in mem_widths
+              for vw in vpu_widths for qd in queue_depths]
+    knobs = O3Knobs.from_grid(hw, combos)
+    # per-op costs are independent of the O3 knobs: compile each program
+    # ONCE and run the shared array form across the whole grid
+    diffs = np.empty((len(table.programs), knobs.batch))
+    for r, (prog, row) in enumerate(zip(table.programs, table.rows)):
+        cp = compile_program(prog, hw, compute_dtype=compute_dtype)
+        t_us = schedule_batch(cp, knobs, backend=backend) * 1e6
+        diffs[r] = np.abs(t_us - row.measured_us) / row.measured_us * 100.0
+    mean_abs = diffs.mean(axis=0)
+    within = (diffs <= 10.0).mean(axis=0)
     results: List[Dict] = []
-    for w in windows:
-        for mw in mem_widths:
-            for qd in queue_depths:
-                cand = hw.with_(
-                    inflight_window=w,
-                    issue_width={**hw.issue_width, "mem": mw},
-                    queue_depth={p: qd for p in ("mxu", "vpu", "mem", "ici")})
-                diffs = []
-                for prog, ops, row in zip(table.programs, costed, table.rows):
-                    t = schedule_program(prog, cand,
-                                         compute_dtype=compute_dtype,
-                                         costed=ops).t_est
-                    diffs.append(abs(t * 1e6 - row.measured_us)
-                                 / row.measured_us * 100.0)
-                results.append({"inflight_window": w, "mem_issue_width": mw,
-                                "queue_depth": qd,
-                                "mean_abs_diff_pct": statistics.mean(diffs),
-                                "within_10pct": sum(d <= 10.0 for d in diffs)
-                                / len(diffs)})
+    for k, (w, mw, vw, qd) in enumerate(combos):
+        results.append({"inflight_window": w, "mem_issue_width": mw,
+                        "vpu_issue_width": vw, "queue_depth": qd,
+                        "mean_abs_diff_pct": float(mean_abs[k]),
+                        "within_10pct": float(within[k])})
     results.sort(key=lambda r: r["mean_abs_diff_pct"])
     best = results[0]
-    tuned = hw.with_(
-        inflight_window=best["inflight_window"],
-        issue_width={**hw.issue_width, "mem": best["mem_issue_width"]},
-        queue_depth={p: best["queue_depth"]
-                     for p in ("mxu", "vpu", "mem", "ici")})
+    tuned = _knob_spec(hw, best["inflight_window"], best["mem_issue_width"],
+                       best["vpu_issue_width"], best["queue_depth"])
     return O3Sweep(results=results, best=tuned)
 
 
@@ -363,11 +372,13 @@ class O3Sweep:
     best: HardwareSpec           # hw with the winning O3 knobs applied
 
     def report(self, top: int = 8) -> str:
-        lines = [f"{'window':>7s}{'mem_w':>7s}{'qdepth':>7s}"
+        lines = [f"{'window':>7s}{'mem_w':>7s}{'vpu_w':>7s}{'qdepth':>7s}"
                  f"{'mean|.|%':>10s}{'<=10%':>7s}"]
         for r in self.results[:top]:
             lines.append(f"{r['inflight_window']:>7d}"
-                         f"{r['mem_issue_width']:>7d}{r['queue_depth']:>7d}"
+                         f"{r['mem_issue_width']:>7d}"
+                         f"{r.get('vpu_issue_width', 1):>7d}"
+                         f"{r['queue_depth']:>7d}"
                          f"{r['mean_abs_diff_pct']:>10.1f}"
                          f"{100 * r['within_10pct']:>6.0f}%")
         return "\n".join(lines)

@@ -1,0 +1,463 @@
+"""Compiled array-form scheduling core — the simulator's hot path, SoA.
+
+``schedule_program`` was a pure-Python per-op interpreter over ``OpStat``
+dataclasses (~75k scheduled ops/s on the kernel-suite bench).  The paper's
+whole premise is that a tuned pipeline simulator must be *fast enough* to
+sweep OoO resource parameters against a test chip — so the costed program
+is compiled ONCE per ``(Program, HardwareSpec, dtype)`` into a
+structure-of-arrays :class:`CompiledProgram` (durations, port ids, CSR
+def-use edges, packed O3 knobs) and every downstream consumer runs on it:
+
+* :func:`schedule_arrays` — the fast scalar kernel: ``t_est`` /
+  ``port_busy`` / ``stall_by_reason`` with zero ``ScheduledOp``
+  allocations (the knob-independent invariants ``t_serial`` /
+  ``t_dataflow`` / ``port_busy`` / ``n_edges`` are precomputed at compile
+  time and simply carried),
+* :func:`schedule_batch` — the batched sweep engine: the whole O3 knob
+  grid is a batch axis; one sequential pass over the ops advances every
+  knob combination in lockstep with NumPy vector ops, so enlarging the
+  grid (windows up to 1024, per-port widths) is ~free,
+* :func:`schedule_batch_jax` — the same in-order list scheduler as a
+  ``jax.lax.scan`` (``vmap``-ed over the knob axis and ``jit``-ed), so
+  the simulator itself can run on the accelerator it models.
+
+Every kernel replays the reference scheduler's float operations in the
+same order, so ``t_est`` is bit-identical to ``core.schedule``'s
+interpreter — asserted by the differential tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cost import OpTime, cost_program
+from .hlo import Program
+from .hwspec import HardwareSpec
+
+# global port-id mapping; core.cost only ever emits these four
+PORTS: Tuple[str, ...] = ("mxu", "vpu", "mem", "ici")
+_PORT_ID = {p: i for i, p in enumerate(PORTS)}
+_COMPILE_CACHE_SIZE = 8
+
+
+@dataclass
+class O3Knobs:
+    """A batch of packed O3 knob combinations (the grid's batch axis)."""
+    window: np.ndarray           # [B] int64, already clamped >= 1
+    width: np.ndarray            # [B, len(PORTS)] int64, clamped >= 1
+    depth: np.ndarray            # [B, len(PORTS)] int64, clamped >= 1
+
+    @property
+    def batch(self) -> int:
+        return len(self.window)
+
+    @classmethod
+    def from_specs(cls, specs: Sequence[HardwareSpec]) -> "O3Knobs":
+        b = len(specs)
+        window = np.empty(b, dtype=np.int64)
+        width = np.empty((b, len(PORTS)), dtype=np.int64)
+        depth = np.empty((b, len(PORTS)), dtype=np.int64)
+        for i, hw in enumerate(specs):
+            window[i] = max(1, hw.inflight_window)
+            for p, pid in _PORT_ID.items():
+                width[i, pid] = max(1, hw.issue_width.get(p, 1))
+                depth[i, pid] = max(1, hw.queue_depth.get(p, 1))
+        return cls(window, width, depth)
+
+    @classmethod
+    def single(cls, hw: HardwareSpec) -> "O3Knobs":
+        return cls.from_specs([hw])
+
+    @classmethod
+    def from_grid(cls, hw: HardwareSpec,
+                  combos: Sequence[Tuple[int, int, int, int]]) -> "O3Knobs":
+        """Pack a (window, mem_width, vpu_width, queue_depth) grid around
+        ``hw``'s remaining knobs WITHOUT materializing a HardwareSpec per
+        combo (the sweep's grid is just integers)."""
+        b = len(combos)
+        window = np.empty(b, dtype=np.int64)
+        width = np.empty((b, len(PORTS)), dtype=np.int64)
+        depth = np.empty((b, len(PORTS)), dtype=np.int64)
+        for p, pid in _PORT_ID.items():
+            width[:, pid] = max(1, hw.issue_width.get(p, 1))
+        for i, (w, mw, vw, qd) in enumerate(combos):
+            window[i] = max(1, w)
+            width[i, _PORT_ID["mem"]] = max(1, mw)
+            width[i, _PORT_ID["vpu"]] = max(1, vw)
+            depth[i, :] = max(1, qd)
+        return cls(window, width, depth)
+
+
+@dataclass
+class CompiledProgram:
+    """Structure-of-arrays form of one costed program.
+
+    Arrays are aligned with ``Program.ops``; ops the cost model does not
+    charge carry ``port_id == -1`` and zero duration (they still occupy a
+    ROB slot and propagate readiness, exactly like the interpreter).
+    Everything the O3 knobs canNOT change is precomputed here once:
+    ``t_serial``, ``t_dataflow``, ``port_busy``, ``n_ops``, ``n_edges``.
+    """
+    n: int
+    durations: np.ndarray        # [n] f64: (max(t_c,t_m,t_i)+startup)*count
+    port_id: np.ndarray          # [n] int8 into PORTS; -1 = uncosted
+    dep_indptr: np.ndarray       # [n+1] CSR over valid (j < i) edges
+    dep_indices: np.ndarray      # [E]
+    pos_in_port: np.ndarray      # [n] running issue index on the op's port
+    port_counts: np.ndarray      # [len(PORTS)] ops issued per port
+    # knob-independent schedule invariants
+    t_serial: float
+    t_dataflow: float
+    n_ops: float
+    n_edges: int
+    port_busy: Dict[str, float]
+    knobs: O3Knobs               # packed from the compiling HardwareSpec
+    # python-list mirrors (scalar kernel: list indexing beats ndarray)
+    _dur_l: list = field(default_factory=list, repr=False)
+    _port_l: list = field(default_factory=list, repr=False)
+    _indptr_l: list = field(default_factory=list, repr=False)
+    _indices_l: list = field(default_factory=list, repr=False)
+
+
+def compile_program(prog: Program, hw: HardwareSpec,
+                    links_per_collective: int = 2,
+                    compute_dtype: Optional[str] = None,
+                    costed: Optional[List[Optional[OpTime]]] = None
+                    ) -> CompiledProgram:
+    """Compile (and memoize on the Program) the SoA form.
+
+    The cache is keyed by ``(hw identity, dtype, links)``: an O3-knob
+    sweep passes the SAME spec object and hits the cache, so the grid
+    shares one CompiledProgram.  Knob variants created via ``with_`` get
+    their own entry (durations could differ via ``op_startup_ns``).
+
+    A caller-supplied ``costed`` list bypasses the cache entirely (no
+    lookup, no store): the caller may have edited the costs, and the key
+    cannot see that.
+    """
+    if costed is None:
+        cache = prog.__dict__.setdefault("_compiled_cache", [])
+        for chw, cdt, clk, ccp in cache:
+            if chw is hw and cdt == compute_dtype \
+                    and clk == links_per_collective:
+                return ccp
+        costed = cost_program(prog, hw, links_per_collective, compute_dtype)
+    else:
+        cache = None
+
+    n = len(prog.ops)
+    startup = hw.op_startup_ns * 1e-9
+    durations = np.zeros(n, dtype=np.float64)
+    port_id = np.full(n, -1, dtype=np.int8)
+    pos_in_port = np.zeros(n, dtype=np.int64)
+    port_counts = np.zeros(len(PORTS), dtype=np.int64)
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    indices: List[int] = []
+    port_busy: Dict[str, float] = {}
+    t_serial = 0.0
+    n_ops = 0.0
+    n_edges = 0
+
+    for i, ot in enumerate(costed):
+        o = prog.ops[i]
+        for j in o.deps:
+            if 0 <= j < i:
+                indices.append(j)
+        indptr[i + 1] = len(indices)
+        if ot is None:
+            continue
+        # same float-op order as the interpreter: per-instance max + startup,
+        # times the (loop-trip) count
+        dur = (max(ot.t_compute, ot.t_mem, ot.t_ici) + startup) * o.count
+        pid = _PORT_ID[ot.port]
+        durations[i] = dur
+        port_id[i] = pid
+        pos_in_port[i] = port_counts[pid]
+        port_counts[pid] += 1
+        port_busy[ot.port] = port_busy.get(ot.port, 0.0) + dur
+        t_serial += dur
+        n_ops += o.count
+        n_edges += int(indptr[i + 1] - indptr[i])
+
+    # pure dataflow critical path (infinite resources lower bound) is
+    # knob-independent: precompute once
+    length = [0.0] * n
+    idx_l = indices
+    ptr_l = indptr.tolist()
+    dur_l = durations.tolist()
+    for i in range(n):
+        best = 0.0
+        for k in range(ptr_l[i], ptr_l[i + 1]):
+            v = length[idx_l[k]]
+            if v > best:
+                best = v
+        length[i] = dur_l[i] + best
+    t_dataflow = max(length, default=0.0)
+
+    cp = CompiledProgram(
+        n=n, durations=durations, port_id=port_id,
+        dep_indptr=indptr, dep_indices=np.array(indices, dtype=np.int64),
+        pos_in_port=pos_in_port, port_counts=port_counts,
+        t_serial=t_serial, t_dataflow=t_dataflow, n_ops=n_ops,
+        n_edges=n_edges, port_busy=port_busy,
+        knobs=O3Knobs.single(hw),
+        _dur_l=dur_l, _port_l=port_id.tolist(),
+        _indptr_l=ptr_l, _indices_l=idx_l,
+    )
+    if cache is not None:
+        cache.append((hw, compute_dtype, links_per_collective, cp))
+        if len(cache) > _COMPILE_CACHE_SIZE:
+            cache.pop(0)
+    return cp
+
+
+# ------------------------------------------------------- fast scalar kernel
+def schedule_arrays(cp: CompiledProgram, hw: HardwareSpec
+                    ) -> Tuple[float, Dict[str, float]]:
+    """One knob combination, no timeline: returns ``(t_est,
+    stall_by_reason)``.  Bit-identical to the interpreter (same max/add
+    sequence; the port 'heap' degenerates to min-of-list, which sees the
+    same multiset of pipe-free times)."""
+    widths = [max(1, hw.issue_width.get(p, 1)) for p in PORTS]
+    depths = [max(1, hw.queue_depth.get(p, 1)) for p in PORTS]
+    window = max(1, hw.inflight_window)
+
+    durs = cp._dur_l
+    ports = cp._port_l
+    indptr = cp._indptr_l
+    indices = cp._indices_l
+    n = cp.n
+    finishes = [0.0] * n
+    rt = [0.0] * n
+    rt_prev = 0.0
+    pipes: List[Optional[List[float]]] = [None] * len(PORTS)
+    hist: List[List[float]] = [[] for _ in PORTS]
+    s_port = s_window = s_queue = 0.0
+    t_est = 0.0
+
+    for i in range(n):
+        ready = 0.0
+        for k in range(indptr[i], indptr[i + 1]):
+            f = finishes[indices[k]]
+            if f > ready:
+                ready = f
+        p = ports[i]
+        if p < 0:
+            # free op: propagate readiness through it at zero cost
+            finishes[i] = ready
+            if ready > rt_prev:
+                rt_prev = ready
+            rt[i] = rt_prev
+            continue
+        pl = pipes[p]
+        if pl is None:
+            pl = pipes[p] = [0.0] * widths[p]
+        start = ready
+        why = 0
+        pf = min(pl)
+        if pf > start:
+            start, why = pf, 1
+        if i >= window:
+            wt = rt[i - window]
+            if wt > start:
+                start, why = wt, 2
+        h = hist[p]
+        d = depths[p]
+        if len(h) >= d:
+            qt = h[-d]
+            if qt > start:
+                start, why = qt, 3
+        finish = start + durs[i]
+        pl[pl.index(pf)] = finish
+        h.append(start)
+        finishes[i] = finish
+        if finish > rt_prev:
+            rt_prev = finish
+        rt[i] = rt_prev
+        if finish > t_est:
+            t_est = finish
+        if start > ready:
+            d_t = start - ready
+            if why == 1:
+                s_port += d_t
+            elif why == 2:
+                s_window += d_t
+            else:
+                s_queue += d_t
+
+    stall: Dict[str, float] = {}
+    if s_port > 0:
+        stall["port"] = s_port
+    if s_window > 0:
+        stall["window"] = s_window
+    if s_queue > 0:
+        stall["queue"] = s_queue
+    return t_est, stall
+
+
+# ------------------------------------------------------ batched numpy kernel
+def schedule_batch(cp: CompiledProgram, knobs: O3Knobs,
+                   backend: str = "numpy") -> np.ndarray:
+    """Schedule every knob combination in ``knobs`` against the shared
+    compiled program in ONE sequential pass over the ops (the knob grid is
+    the vector axis of every state update).  Returns ``t_est`` per combo,
+    bit-identical to running the scalar kernel per combination."""
+    if backend == "jax":
+        return schedule_batch_jax(cp, knobs)
+    if backend != "numpy":
+        raise ValueError(f"unknown schedule backend {backend!r}")
+    B = knobs.batch
+    n = cp.n
+    t_est = np.zeros(B, dtype=np.float64)
+    if n == 0 or B == 0:
+        return t_est
+    arange_b = np.arange(B)
+    window = knobs.window
+    finishes = np.zeros((n, B), dtype=np.float64)
+    rt = np.zeros((n, B), dtype=np.float64)
+    rt_prev = np.zeros(B, dtype=np.float64)
+    # per-port pipes, padded to the batch's max width; lanes beyond a
+    # combo's width start at +inf so min/argmin never picks them
+    pipes: List[Optional[np.ndarray]] = [None] * len(PORTS)
+    # per-port issue-start history: the op->port mapping is knob-independent,
+    # so each port's history rows line up across the whole batch
+    hist = [np.empty((int(c), B), dtype=np.float64) for c in cp.port_counts]
+    hist_len = [0] * len(PORTS)
+
+    indptr = cp.dep_indptr
+    indices = cp.dep_indices
+    ports = cp._port_l
+    durs = cp._dur_l
+
+    for i in range(n):
+        lo, hi = indptr[i], indptr[i + 1]
+        if hi > lo:
+            ready = finishes[indices[lo:hi]].max(axis=0)
+        else:
+            ready = np.zeros(B, dtype=np.float64)
+        p = ports[i]
+        if p < 0:
+            finishes[i] = ready
+            np.maximum(rt_prev, ready, out=rt_prev)
+            rt[i] = rt_prev
+            continue
+        pl = pipes[p]
+        if pl is None:
+            w = knobs.width[:, p]
+            pl = np.where(np.arange(int(w.max()))[None, :] < w[:, None],
+                          0.0, np.inf)
+            pipes[p] = pl
+        start = ready.copy()
+        pf = pl.min(axis=1)
+        np.maximum(start, pf, out=start)
+        if i >= 1:
+            idx = i - window
+            valid = idx >= 0
+            if valid.any():
+                wt = np.where(valid, rt[np.clip(idx, 0, None), arange_b], 0.0)
+                np.maximum(start, wt, out=start)
+        h = hist[p]
+        qidx = hist_len[p] - knobs.depth[:, p]
+        qvalid = qidx >= 0
+        if qvalid.any():
+            qt = np.where(qvalid, h[np.clip(qidx, 0, None), arange_b], 0.0)
+            np.maximum(start, qt, out=start)
+        finish = start + durs[i]
+        lane = pl.argmin(axis=1)
+        pl[arange_b, lane] = finish
+        h[hist_len[p]] = start
+        hist_len[p] += 1
+        finishes[i] = finish
+        np.maximum(rt_prev, finish, out=rt_prev)
+        rt[i] = rt_prev
+        np.maximum(t_est, finish, out=t_est)
+    return t_est
+
+
+# --------------------------------------------------------- jax.lax.scan form
+def schedule_batch_jax(cp: CompiledProgram, knobs: O3Knobs) -> np.ndarray:
+    """The in-order list scheduler as a ``jax.lax.scan``, ``vmap``-ed over
+    the knob batch and ``jit``-ed — the simulator running on the
+    accelerator it models.  Pads the CSR edge lists to the max in-degree
+    and the pipes/history state to the batch's max width/port counts.
+
+    Runs in x64 so the result matches the NumPy kernels to float64
+    precision; returns a NumPy array of ``t_est`` per combo.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    n = cp.n
+    B = knobs.batch
+    if n == 0 or B == 0:
+        return np.zeros(B, dtype=np.float64)
+    P = len(PORTS)
+    indptr = cp.dep_indptr
+    deg = np.diff(indptr)
+    maxdeg = max(1, int(deg.max()) if n else 1)
+    deps_pad = np.full((n, maxdeg), -1, dtype=np.int64)
+    for i in range(n):
+        lo, hi = indptr[i], indptr[i + 1]
+        deps_pad[i, : hi - lo] = cp.dep_indices[lo:hi]
+    port_eff = np.maximum(cp.port_id.astype(np.int64), 0)
+    costed = cp.port_id >= 0
+    max_hist = max(1, int(cp.port_counts.max()))
+    wmax = max(1, int(knobs.width.max()))
+
+    with enable_x64():
+        xs = (jnp.asarray(cp.durations), jnp.asarray(port_eff),
+              jnp.asarray(costed), jnp.asarray(deps_pad),
+              jnp.asarray(cp.pos_in_port), jnp.arange(n))
+
+        def one_combo(window, width, depth):
+            pipes0 = jnp.where(jnp.arange(wmax)[None, :] < width[:, None],
+                               0.0, jnp.inf)
+            carry0 = (jnp.zeros(n), jnp.zeros(n), 0.0,
+                      pipes0, jnp.zeros((P, max_hist)), 0.0)
+
+            def body(carry, x):
+                fin_arr, rt_arr, rt_prev, pipes, hist, t_best = carry
+                dur, pid, is_costed, deps, pos, i = x
+                ready = jnp.max(jnp.where(deps >= 0,
+                                          fin_arr[jnp.clip(deps, 0)], 0.0))
+                row = pipes[pid]
+                pf = row.min()
+                widx = i - window
+                wt = jnp.where(widx >= 0, rt_arr[jnp.clip(widx, 0)], 0.0)
+                qidx = pos - depth[pid]
+                qt = jnp.where(qidx >= 0, hist[pid, jnp.clip(qidx, 0)], 0.0)
+                start = jnp.maximum(jnp.maximum(ready, pf),
+                                    jnp.maximum(wt, qt))
+                finish = start + dur
+                fin_i = jnp.where(is_costed, finish, ready)
+                lane = row.argmin()
+                pipes = jnp.where(is_costed,
+                                  pipes.at[pid, lane].set(finish), pipes)
+                hist = jnp.where(is_costed,
+                                 hist.at[pid, pos].set(start), hist)
+                rt_prev = jnp.maximum(rt_prev, fin_i)
+                t_best = jnp.where(is_costed,
+                                   jnp.maximum(t_best, finish), t_best)
+                return (fin_arr.at[i].set(fin_i), rt_arr.at[i].set(rt_prev),
+                        rt_prev, pipes, hist, t_best), None
+
+            (_, _, _, _, _, t_best), _ = jax.lax.scan(body, carry0, xs)
+            return t_best
+
+        # the jitted fn closes over THIS program's arrays (and the padded
+        # lane count): cache it on the CompiledProgram, keyed by wmax, so
+        # it can never serve another program or a wider knob batch
+        fns = getattr(cp, "_jax_fns", None)
+        if fns is None:
+            fns = {}
+            cp._jax_fns = fns
+        fn = fns.get(wmax)
+        if fn is None:
+            fn = jax.jit(jax.vmap(one_combo))
+            fns[wmax] = fn
+        out = fn(jnp.asarray(knobs.window), jnp.asarray(knobs.width),
+                 jnp.asarray(knobs.depth))
+        return np.asarray(out, dtype=np.float64)

@@ -131,15 +131,26 @@ class HardwareSpec:
         return self.vpu_flops.get(dtype, self.vpu_flops.get("default", 1e12))
 
     def memory_hierarchy(self) -> Tuple[MemLevel, ...]:
-        """Ordered hierarchy, innermost first (L1/VMEM -> ... -> HBM)."""
+        """Ordered hierarchy, innermost first (L1/VMEM -> ... -> HBM).
+
+        Memoized on the (frozen) spec: ``route_*``/``cost_program`` call
+        this in hot loops and must not rebuild the tuple every time.
+        ``dataclasses.replace`` (and therefore ``with_``) returns a fresh
+        instance without the cache, so stale hierarchies cannot leak."""
+        cached = getattr(self, "_mh_cache", None)
+        if cached is not None:
+            return cached
         if self.mem_levels:
-            return self.mem_levels
-        return (
-            MemLevel("vmem", float(self.vmem_bytes),
-                     float(self.vmem_bw), float(self.vmem_bw)),
-            MemLevel("hbm", float(self.hbm_bytes),
-                     self.hbm_read_bw, self.hbm_write_bw),
-        )
+            mh = self.mem_levels
+        else:
+            mh = (
+                MemLevel("vmem", float(self.vmem_bytes),
+                         float(self.vmem_bw), float(self.vmem_bw)),
+                MemLevel("hbm", float(self.hbm_bytes),
+                         self.hbm_read_bw, self.hbm_write_bw),
+            )
+        object.__setattr__(self, "_mh_cache", mh)
+        return mh
 
 
 TPU_V5E = HardwareSpec(

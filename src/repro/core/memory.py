@@ -40,6 +40,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from .hlo import OpStat, Program
 
 
@@ -134,64 +136,114 @@ def route_program(prog: Program, levels: Sequence[MemLevel],
     an operand larger than a level can never be resident there).  Edges
     that cross a collapsed loop body (count > 1) use the single-iteration
     footprint, a deliberate under-estimate recorded in DESIGN.md §12.
+
+    Vectorized (DESIGN.md §13): one array pass over the CSR def-use edge
+    list instead of a per-op/per-edge Python loop — the residency lookup
+    becomes a ``searchsorted`` on the (cumulative-max) level capacities,
+    the read-budget clamp a prefix-sum formulation, the per-level byte
+    tallies ``np.add.at`` scatters.
     """
     if not levels:
         raise ValueError("empty memory hierarchy")
     n = len(prog.ops)
+    if n == 0:
+        return []
+    L = len(levels)
+    # residency_level scans innermost-out and takes the first fit, so a
+    # (pathological) smaller-capacity outer level can never win: the
+    # running max reproduces first-fit exactly under searchsorted
+    caps = np.maximum.accumulate(
+        np.array([lv.capacity for lv in levels], dtype=np.float64))
+    read_bw = np.array([lv.read_bw for lv in levels], dtype=np.float64)
+    write_bw = np.array([lv.write_bw for lv in levels], dtype=np.float64)
+    lat = np.array([lv.latency_s for lv in levels], dtype=np.float64)
+
     scales = [_dtype_scale(o, compute_dtype) for o in prog.ops]
+    rws = [_split_rw(o, scales[i]) for i, o in enumerate(prog.ops)]
+    rb = np.array([r for r, _ in rws], dtype=np.float64)
+    wb = np.array([w for _, w in rws], dtype=np.float64)
     # foot[i] = effective bytes written by ops 0..i-1
-    foot = [0.0] * (n + 1)
-    rws = []
-    for i, o in enumerate(prog.ops):
-        rb, wb = _split_rw(o, scales[i])
-        rws.append((rb, wb))
-        foot[i + 1] = foot[i] + wb
+    foot = np.zeros(n + 1, dtype=np.float64)
+    np.cumsum(wb, out=foot[1:])
 
+    # cold-traffic level: warm working-set rule on cache machines,
+    # outermost (HBM/DRAM) on scratch-memory machines
+    if warm_caches:
+        cold = np.minimum(np.searchsorted(caps, rb + wb, side="left"), L - 1)
+    else:
+        cold = np.full(n, L - 1, dtype=np.intp)
+
+    # CSR def-use edge list (consumer-major, edges in OpStat.deps order)
+    srcs: List[int] = []
+    dsts: List[int] = []
+    ebts: List[float] = []
+    indptr = np.zeros(n + 1, dtype=np.intp)
+    for i, o in enumerate(prog.ops):
+        sc = scales[i]
+        for j, b in zip(o.deps, o.dep_bytes):
+            if 0 <= j < i and b > 0:
+                srcs.append(j)
+                dsts.append(i)
+                ebts.append(b * sc)
+        indptr[i + 1] = len(srcs)
+    src = np.array(srcs, dtype=np.intp)
+    dst = np.array(dsts, dtype=np.intp)
+    eb = np.array(ebts, dtype=np.float64)
+
+    # dep reads by reuse distance; shares clamped to the read budget
+    # (slice/DUS refinements can make boundary reads smaller than the
+    # nominal operand sizes the edges carry)
+    total_share = np.bincount(dst, weights=eb,
+                              minlength=n).astype(np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        shrink = np.where((total_share > rb) & (rb > 0),
+                          rb / np.where(total_share > 0, total_share, 1.0),
+                          1.0)
+    e_shr = eb * shrink[dst]
+    # sequential budget clamp, prefix-sum form: edge k of op i gets
+    # min(share_k, budget_i - sum of earlier shares of i)
+    cs = np.concatenate(([0.0], np.cumsum(e_shr)))
+    prev_within = cs[:-1] - cs[indptr[dst]]
+    e_eff = np.clip(np.minimum(e_shr, rb[dst] - prev_within), 0.0, None)
+    e_eff[rb[dst] <= 0] = 0.0
+
+    dist = foot[dst] - foot[src]
+    elvl = np.minimum(np.searchsorted(caps, dist, side="left"), L - 1)
+
+    dep_read = np.bincount(dst, weights=e_eff,
+                           minlength=n).astype(np.float64)
+    t_read = np.bincount(dst, weights=e_eff / read_bw[elvl],
+                         minlength=n).astype(np.float64)
+    leftover = np.clip(rb - dep_read, 0.0, None)
+    has_cold_read = leftover > 0
+    t_read += np.where(has_cold_read, leftover / read_bw[cold], 0.0)
+    t_write = np.where(wb > 0, wb / write_bw[cold], 0.0)
+
+    # deepest level touched (latency is charged there once per op)
+    deepest = np.where(wb > 0, cold, 0)
+    live = e_eff > 0
+    np.maximum.at(deepest, dst[live], elvl[live])
+    deepest = np.where(has_cold_read, np.maximum(deepest, cold), deepest)
+    latency = lat[deepest]
+
+    # per-(op, level) byte tallies for the PA hierarchy section
+    rbl = np.zeros((n, L), dtype=np.float64)
+    np.add.at(rbl, (dst[live], elvl[live]), e_eff[live])
+    rbl[has_cold_read, cold[has_cold_read]] += leftover[has_cold_read]
+
+    names = [lv.name for lv in levels]
     out: List[MemTraffic] = []
-    for i, o in enumerate(prog.ops):
-        rb, wb = rws[i]
-        tr = MemTraffic()
-        # cold-traffic level: warm working-set rule on cache machines,
-        # outermost (HBM/DRAM) on scratch-memory machines
-        cold_level = (residency_level(levels, rb + wb) if warm_caches
-                      else levels[-1])
-        _charge(tr, cold_level, 0.0, wb)
-        deepest = cold_level if wb > 0 else levels[0]
-
-        # dep reads by reuse distance; shares clamped to the read budget
-        # (slice/DUS refinements can make boundary reads smaller than the
-        # nominal operand sizes the edges carry)
-        budget = rb
-        shares = [(j, b * scales[i]) for j, b in zip(o.deps, o.dep_bytes)
-                  if 0 <= j < i and b > 0]
-        total_share = sum(b for _, b in shares)
-        shrink = (budget / total_share) if total_share > budget > 0 else 1.0
-        if budget > 0:
-            for j, b in shares:
-                b = min(b * shrink, budget)
-                if b <= 0:
-                    continue
-                dist = foot[i] - foot[j]
-                lv = residency_level(levels, dist)
-                _charge(tr, lv, b, 0.0)
-                budget -= b
-                if _depth(levels, lv) > _depth(levels, deepest):
-                    deepest = lv
-        # cold reads (parameters/constants)
-        if budget > 0:
-            _charge(tr, cold_level, budget, 0.0)
-            if _depth(levels, cold_level) > _depth(levels, deepest):
-                deepest = cold_level
-        tr.latency_s = deepest.latency_s
+    for i in range(n):
+        tr = MemTraffic(t_read=float(t_read[i]), t_write=float(t_write[i]),
+                        latency_s=float(latency[i]))
+        row = rbl[i]
+        for k in range(L):
+            if row[k] > 0:
+                tr.read_by_level[names[k]] = float(row[k])
+        if wb[i] > 0:
+            tr.write_by_level[names[cold[i]]] = float(wb[i])
         out.append(tr)
     return out
-
-
-def _depth(levels: Sequence[MemLevel], lv: MemLevel) -> int:
-    for i, cand in enumerate(levels):
-        if cand.name == lv.name:
-            return i
-    return len(levels)
 
 
 def aggregate_traffic(traffic: Sequence[Optional[MemTraffic]],

@@ -121,8 +121,11 @@ def _schedule_section(sched: ScheduleResult) -> List[str]:
     cp = sched.critical_path
     if cp:
         covered = sum(c.duration for c in cp)
+        trunc = (" — TRUNCATED: binding chain longer than "
+                 f"{len(cp)} entries, shown path is a suffix"
+                 if sched.critical_path_truncated else "")
         lines.append(f"    critical path ({len(cp)} ops, "
-                     f"{100 * covered / mk:.0f}% of makespan):")
+                     f"{100 * covered / mk:.0f}% of makespan{trunc}):")
         for c in cp[-12:]:
             lines.append(f"      {c.op.name[:40]:<40s} {c.port:<4s} "
                          f"start {_fmt_t(c.start)}  dur "

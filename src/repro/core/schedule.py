@@ -29,17 +29,33 @@ which gives the engine's defining invariant, asserted in the golden tests:
 
 where ``t_roofline`` here is the schedule-consistent bound
 ``max_p busy_p / width_p`` and ``t_serial`` is the fully-serialized sum.
+
+Two execution paths share those semantics (DESIGN.md §13):
+
+* the **fast path** (default): ``core.compiled`` compiles the costed
+  program to structure-of-arrays form once and runs an allocation-free
+  kernel — ``t_est``/``port_busy``/``stall_by_reason`` only, bit-identical
+  to the interpreter;
+* the **reference interpreter** (``schedule_reference``): builds the full
+  ``ScheduledOp`` timeline and binding-chain critical path.  The fast
+  path's ``ScheduleResult`` materializes it lazily the first time
+  ``timeline`` / ``critical_path`` is touched (i.e. when the PA report
+  asks), so sweeps never pay for it.
 """
 from __future__ import annotations
 
 import heapq
 from collections import defaultdict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from .cost import OpTime, cost_program
 from .hlo import OpStat, Program
 from .hwspec import HardwareSpec
+
+# the binding-chain walk stops after this many entries; ScheduleResult
+# raises the critical_path_truncated flag when the cap bites
+CRITICAL_PATH_LIMIT = 256
 
 
 @dataclass
@@ -70,15 +86,55 @@ class ScheduleResult:
     port_busy: Dict[str, float]  # summed scheduled durations per port
     n_ops: float
     n_edges: int                 # def-use edges seen by the scheduler
-    timeline: List[ScheduledOp]
-    critical_path: List[ScheduledOp]
     stall_by_reason: Dict[str, float] = field(default_factory=dict)
+    issue_width: Dict[str, int] = field(default_factory=dict)
+    # timeline/critical-path detail: populated eagerly by the reference
+    # interpreter, lazily (via _detail) on the fast path
+    _timeline: Optional[List[ScheduledOp]] = field(default=None, repr=False)
+    _critical_path: Optional[List[ScheduledOp]] = field(default=None,
+                                                        repr=False)
+    _cp_truncated: bool = False
+    _detail: Optional[Callable[[], "ScheduleResult"]] = field(default=None,
+                                                              repr=False)
+
+    def _ensure_detail(self) -> None:
+        if self._timeline is None:
+            if self._detail is None:
+                self._timeline, self._critical_path = [], []
+                return
+            ref = self._detail()
+            self._timeline = ref._timeline
+            self._critical_path = ref._critical_path
+            self._cp_truncated = ref._cp_truncated
+            self._detail = None
+
+    @property
+    def timeline(self) -> List[ScheduledOp]:
+        self._ensure_detail()
+        return self._timeline
+
+    @property
+    def critical_path(self) -> List[ScheduledOp]:
+        self._ensure_detail()
+        return self._critical_path
+
+    @property
+    def critical_path_truncated(self) -> bool:
+        """True when the binding-chain walk hit CRITICAL_PATH_LIMIT — the
+        reported path is a suffix, not the whole chain."""
+        self._ensure_detail()
+        return self._cp_truncated
 
     @property
     def bound_by(self) -> str:
+        """Binding port, normalized by issue width — consistent with how
+        t_roofline picks it (raw busy would crown a 4-pipe DMA port over
+        a busier single-pipe MXU)."""
         if not self.port_busy:
             return "mem"
-        return max(self.port_busy, key=lambda k: self.port_busy[k])
+        w = self.issue_width
+        return max(self.port_busy,
+                   key=lambda k: self.port_busy[k] / max(1, w.get(k, 1)))
 
     @property
     def overlap_fraction(self) -> float:
@@ -97,11 +153,52 @@ def _duration(ot: OpTime, hw: HardwareSpec) -> float:
     return per * ot.op.count
 
 
+def _roofline(port_busy: Dict[str, float], widths: Dict[str, int]) -> float:
+    return max((busy / max(1, widths.get(p, 1))
+                for p, busy in port_busy.items()), default=0.0)
+
+
 def schedule_program(prog: Program, hw: HardwareSpec,
                      links_per_collective: int = 2,
                      compute_dtype: Optional[str] = None,
-                     costed: Optional[List[Optional[OpTime]]] = None
-                     ) -> ScheduleResult:
+                     costed: Optional[List[Optional[OpTime]]] = None,
+                     detail: bool = False) -> ScheduleResult:
+    """Schedule ``prog`` under ``hw``'s O3 knobs.
+
+    Default is the compiled fast path (no ``ScheduledOp`` allocation);
+    the timeline/critical-path detail is built on first access — pass
+    ``detail=True`` to force the reference interpreter up front.
+    """
+    if detail:
+        return schedule_reference(prog, hw, links_per_collective,
+                                  compute_dtype, costed)
+    from .compiled import compile_program, schedule_arrays
+    cp = compile_program(prog, hw, links_per_collective, compute_dtype,
+                         costed=costed)
+    t_est, stall = schedule_arrays(cp, hw)
+    return ScheduleResult(
+        t_est=t_est,
+        t_roofline=_roofline(cp.port_busy, hw.issue_width),
+        t_serial=cp.t_serial,
+        t_dataflow=cp.t_dataflow,
+        port_busy=dict(cp.port_busy),
+        n_ops=cp.n_ops,
+        n_edges=cp.n_edges,
+        stall_by_reason=stall,
+        issue_width=dict(hw.issue_width),
+        _detail=lambda: schedule_reference(prog, hw, links_per_collective,
+                                           compute_dtype, costed),
+    )
+
+
+def schedule_reference(prog: Program, hw: HardwareSpec,
+                       links_per_collective: int = 2,
+                       compute_dtype: Optional[str] = None,
+                       costed: Optional[List[Optional[OpTime]]] = None
+                       ) -> ScheduleResult:
+    """The per-op interpreter: same schedule as the fast path, plus the
+    full timeline and binding-chain critical path.  The differential tests
+    pin the fast path's ``t_est``/``port_busy``/stalls to this."""
     n = len(prog.ops)
     if costed is None:
         costed = cost_program(prog, hw, links_per_collective, compute_dtype)
@@ -161,7 +258,6 @@ def schedule_program(prog: Program, hw: HardwareSpec,
         if len(hist) >= depth:
             q_src = hist[-depth]
             q_t = sched_of[q_src].start
-
         start, bound_by, bound_on = ready, ("dep" if dep_src >= 0
                                             else "ready"), dep_src
         for t, why, src in ((pipe_free, "port", pipe_src),
@@ -188,8 +284,6 @@ def schedule_program(prog: Program, hw: HardwareSpec,
             stall[bound_by] += start - ready
 
     t_est = max((s.finish for s in timeline), default=0.0)
-    t_roofline = max((busy / max(1, widths.get(p, 1))
-                      for p, busy in port_busy.items()), default=0.0)
 
     # --- pure dataflow critical path (infinite resources lower bound)
     length = [0.0] * n
@@ -201,10 +295,14 @@ def schedule_program(prog: Program, hw: HardwareSpec,
 
     # --- walk the binding chain back from the makespan op
     critical: List[ScheduledOp] = []
+    truncated = False
     if timeline:
         cur = max(timeline, key=lambda s: s.finish)
         seen = set()
-        while cur is not None and cur.index not in seen and len(critical) < 256:
+        while cur is not None and cur.index not in seen:
+            if len(critical) >= CRITICAL_PATH_LIMIT:
+                truncated = True
+                break
             seen.add(cur.index)
             critical.append(cur)
             cur = sched_of.get(cur.bound_on)
@@ -212,13 +310,15 @@ def schedule_program(prog: Program, hw: HardwareSpec,
 
     return ScheduleResult(
         t_est=t_est,
-        t_roofline=t_roofline,
+        t_roofline=_roofline(port_busy, widths),
         t_serial=t_serial,
         t_dataflow=t_dataflow,
         port_busy=dict(port_busy),
         n_ops=n_ops,
         n_edges=n_edges,
-        timeline=timeline,
-        critical_path=critical,
         stall_by_reason=dict(stall),
+        issue_width=dict(widths),
+        _timeline=timeline,
+        _critical_path=critical,
+        _cp_truncated=truncated,
     )

@@ -82,6 +82,7 @@ class SimReport:
                 "overlap_fraction": s.overlap_fraction,
                 "n_edges": s.n_edges,
                 "stall_by_reason": s.stall_by_reason,
+                "critical_path_truncated": s.critical_path_truncated,
                 "critical_path": [
                     {"op": c.op.name, "port": c.port, "start": c.start,
                      "finish": c.finish, "bound_by": c.bound_by}
@@ -144,8 +145,10 @@ def simulate(compiled, hw: HardwareSpec = TPU_V5E, n_chips: int = 1,
     costed = cost_program(prog, hw, compute_dtype=compute_dtype)
     eng = simulate_program(prog, hw, compute_dtype=compute_dtype,
                            costed=costed)
+    # the PA report below renders the timeline/critical path, so ask the
+    # scheduler for full detail up front (sweeps use the fast path instead)
     sched = (schedule_program(prog, hw, compute_dtype=compute_dtype,
-                              costed=costed)
+                              costed=costed, detail=True)
              if engine in ("schedule", "both") else None)
     rf = roofline_from_program(prog, hw, n_chips, model_flops_global,
                                compute_dtype)
