@@ -107,16 +107,45 @@ def scheduler_throughput(table: calibrate.AccuracyTable,
     return res
 
 
-def a64fx_cycles_per_8elem(kernel_name: str, n: int) -> float:
-    """Simulated single-core A64FX cycles per 8-element operation."""
+def a64fx_kernel_hlo(kernel_name: str, n: int) -> str:
+    """Compile one suite kernel once; both A64FX sections reuse the text."""
     from repro.configs.a64fx_kernelsuite import KERNELS_BY_NAME
     with jax_enable_x64():
         x1, x2, y0 = calibrate._kernel_inputs(KERNELS_BY_NAME[kernel_name], n)
         f = calibrate._jit_kernel(kernel_name)
-        compiled = f.lower(x1, x2, y0).compile()
-    rep = simulate(compiled, hw=A64FX_CORE, n_chips=1, compute_dtype="f64")
+        return f.lower(x1, x2, y0).compile().as_text()
+
+
+def a64fx_cycles_per_8elem(hlo_text: str, n: int) -> float:
+    """Simulated single-core A64FX cycles per 8-element operation."""
+    rep = simulate(hlo_text, hw=A64FX_CORE, n_chips=1, compute_dtype="f64")
     cycles = rep.engine.t_est * 1.8e9
     return cycles / (n / 8)
+
+
+# node estimates: 1 core / one full CMG / the whole 4-CMG node (the old
+# code's only node story was A64FX_CORE's hardcoded ~1/4-of-HBM2 draw;
+# these come from the contention model instead)
+NODE_CORE_COUNTS = (1, 12, 48)
+
+
+def a64fx_node_estimates(hlo_text: str) -> dict:
+    """Contention-aware node estimates (OpenMP-style shard partition) for
+    one suite kernel on the A64FX node topology.  Parses and costs the
+    program once; only the node schedule reruns per core count."""
+    from repro.core.hlo import parse_program
+    from repro.core.node import compile_node, schedule_node
+    prog = parse_program(hlo_text)
+    nc = compile_node(prog, A64FX_CORE, compute_dtype="f64")
+    out = {}
+    for k in NODE_CORE_COUNTS:
+        nr = schedule_node(nc, A64FX_CORE, k, partition="shard")
+        out[k] = {
+            "t_est_us": nr.t_est * 1e6,
+            "t_zero_contention_us": nr.t_zero_contention * 1e6,
+            "hbm2_n_active": nr.per_cmg[0].n_active.get("hbm2", 1.0),
+        }
+    return out
 
 
 def main(argv=None) -> int:
@@ -194,10 +223,23 @@ def main(argv=None) -> int:
     print("\n== simulated A64FX single-core throughput "
           "(Fig. 3 bars; cycles / 8-element op) ==")
     bars = {}
+    hlo_texts = {k.name: a64fx_kernel_hlo(k.name, k.n * 8) for k in kernels}
     for k in kernels:
-        c = a64fx_cycles_per_8elem(k.name, k.n * 8)
+        c = a64fx_cycles_per_8elem(hlo_texts[k.name], k.n * 8)
         bars[k.name] = c
         print(f"  {k.name:<8s}{k.ktype:<10s}{c:8.2f} cyc/8elem")
+
+    print("\n== A64FX node estimates (contention model, shard partition; "
+          "1 core / 1 CMG / full node) ==")
+    node_rows = {}
+    for k in kernels:
+        est = a64fx_node_estimates(hlo_texts[k.name])
+        node_rows[k.name] = est
+        t1, t12, t48 = (est[c]["t_est_us"] for c in NODE_CORE_COUNTS)
+        print(f"  {k.name:<8s}1c {t1:9.2f} us  12c {t12:9.2f} us "
+              f"(x{t1 / max(t12, 1e-12):5.1f})  48c {t48:9.2f} us "
+              f"(x{t1 / max(t48, 1e-12):5.1f})  "
+              f"hbm2 active@12c {est[12]['hbm2_n_active']:.1f}")
 
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "kernel_suite.json").write_text(json.dumps({
@@ -224,6 +266,7 @@ def main(argv=None) -> int:
             },
         },
         "a64fx_core_cycles_per_8elem": bars,
+        "a64fx_node_estimates": node_rows,
         "calibrated_host": {
             "vpu_gflops": hw.vpu_flops["f64"] / 1e9,
             "hbm_gbps": hw.hbm_read_bw / 1e9,
@@ -239,7 +282,11 @@ def main(argv=None) -> int:
     BENCH_JSON.write_text(json.dumps({
         "kernels": {r.name: {"measured_us": r.measured_us,
                              "t_est_occupancy_us": r.simulated_us,
-                             "t_est_schedule_us": r.simulated_sched_us}
+                             "t_est_schedule_us": r.simulated_sched_us,
+                             "a64fx_node_us": {
+                                 str(c): node_rows[r.name][c]["t_est_us"]
+                                 for c in NODE_CORE_COUNTS}
+                             if r.name in node_rows else None}
                     for r in table.rows},
         "scheduler_throughput": thr,
         "summary": {

@@ -21,11 +21,17 @@ from repro.core.compiled import O3Knobs, compile_program, schedule_arrays, \
     schedule_batch
 from repro.core.cost import cost_program
 from repro.core.hlo import OpStat, Program
-from repro.core.hwspec import CPU_HOST
+from repro.core.hwspec import A64FX_CORE, CPU_HOST
+from repro.core.node import compile_node, schedule_node
 from repro.core.schedule import schedule_reference
 
 BENCH_JSON = Path("BENCH_sched_throughput.json")
 FLOOR_OPS_PER_S = 150_000        # 2x the PR-2 baseline of 75,143
+# node engine: one schedule_node call runs the contention fixpoint (up to
+# ~7 full passes over the DAG on 48 cores), so its floor is set well
+# below the single-pass scalar kernel's
+NODE_FLOOR_OPS_PER_S = 15_000
+NODE_CORES = 48
 N_OPS = 10_000
 
 
@@ -70,6 +76,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--floor", type=float, default=FLOOR_OPS_PER_S,
                     help="fail if fast-kernel ops/s drops below this")
+    ap.add_argument("--node-floor", type=float, default=NODE_FLOOR_OPS_PER_S,
+                    help="fail if 48-core node-engine ops/s drops below this")
     ap.add_argument("--min-wall-s", type=float, default=1.0)
     args = ap.parse_args(argv)
 
@@ -91,6 +99,19 @@ def main(argv=None) -> int:
     ref = _timed(lambda: schedule_reference(prog, hw, costed=costed),
                  cp.n, args.min_wall_s)
 
+    # node engine: 48-core contention-aware schedule on the A64FX node
+    # (costing under the A64FX_CORE spec, round-robin partition; one call
+    # = the full contention fixpoint)
+    node_hw = A64FX_CORE
+    nc = compile_node(prog, node_hw, compute_dtype="f64")
+    node_last = []
+
+    def run_node():
+        node_last.append(schedule_node(nc, node_hw, NODE_CORES,
+                                       partition="round-robin"))
+    node = _timed(run_node, nc.n, args.min_wall_s)
+    node_res = node_last[-1]
+
     out = {
         "program": {"n_ops": cp.n, "n_edges": cp.n_edges, "seed": 0},
         "cost_program_s": t_cost,
@@ -98,6 +119,11 @@ def main(argv=None) -> int:
         "fast_kernel": fast,
         "batched_kernel": {**batched, "grid_combos": grid.batch},
         "reference_interpreter": ref,
+        "node_engine": {**node, "n_cores": NODE_CORES,
+                        "fixpoint_iterations": node_res.iterations,
+                        "t_est": node_res.t_est,
+                        "t_zero_contention": node_res.t_zero_contention,
+                        "floor_ops_per_s": args.node_floor},
         "speedup_fast_vs_reference":
             fast["ops_per_s"] / max(ref["ops_per_s"], 1e-9),
         "floor_ops_per_s": args.floor,
@@ -107,12 +133,22 @@ def main(argv=None) -> int:
     print(f"batched kernel:   {batched['ops_per_s']:>12,.0f} ops/s "
           f"({grid.batch} combos)")
     print(f"reference interp: {ref['ops_per_s']:>12,.0f} ops/s")
+    print(f"node engine:      {node['ops_per_s']:>12,.0f} ops/s "
+          f"({NODE_CORES} cores, {node_res.iterations} fixpoint iters)")
     print(f"wrote {BENCH_JSON}")
+    ok = True
     if fast["ops_per_s"] < args.floor:
         print(f"FAIL: fast kernel {fast['ops_per_s']:,.0f} ops/s is below "
               f"the floor of {args.floor:,.0f}")
+        ok = False
+    if node["ops_per_s"] < args.node_floor:
+        print(f"FAIL: node engine {node['ops_per_s']:,.0f} ops/s is below "
+              f"the floor of {args.node_floor:,.0f}")
+        ok = False
+    if not ok:
         return 1
-    print(f"OK: above the {args.floor:,.0f} ops/s floor")
+    print(f"OK: above the {args.floor:,.0f} (fast) and "
+          f"{args.node_floor:,.0f} (node) ops/s floors")
     return 0
 
 

@@ -179,7 +179,9 @@ def fit_cpu_host(n_mem: int = 1 << 21, n_fac: int = 1 << 15) -> HardwareSpec:
         vpu_flops={"f64": alu, "f32": 2 * alu, "default": alu},
         peak_flops={"f64": alu, "f32": 2 * alu, "default": alu},
         transcendental_factor=max(2.0, factors.get("exponential", 4.0)),
-        opcode_factor=factors,
+        # fitted transcendental entries override the fallback table; the
+        # non-fitted per-opcode VPU latencies (minimum/round/...) survive
+        opcode_factor={**CPU_HOST.opcode_factor, **factors},
         hbm_read_bw=rd_bw,
         hbm_write_bw=wr_bw,
         vmem_bytes=24 * 2**20,      # LLC stand-in
@@ -324,7 +326,8 @@ def _knob_spec(hw: HardwareSpec, w: int, mw: int, vw: int,
 def sweep_o3(table: AccuracyTable, hw: HardwareSpec,
              windows=O3_WINDOWS, mem_widths=O3_MEM_WIDTHS,
              queue_depths=O3_QUEUE_DEPTHS, vpu_widths=O3_VPU_WIDTHS,
-             compute_dtype: str = "f64", backend: str = "numpy") -> "O3Sweep":
+             compute_dtype: str = "f64", backend: str = "numpy",
+             core_counts=(1,), topology=None) -> "O3Sweep":
     """Re-schedule already-measured programs under each knob combination
     (no re-measurement, no recompilation) and rank combos by mean |diff|
     of the schedule engine vs the measured wall times.
@@ -335,8 +338,17 @@ def sweep_o3(table: AccuracyTable, hw: HardwareSpec,
     knob grid is a vector axis, not a python loop.  ``backend="jax"``
     runs the same pass as a jit-ed ``lax.scan`` on the accelerator.
 
+    ``core_counts`` adds the node engine's core count as a sweep axis:
+    for each count > 1 the program is re-costed through the shard-mode
+    contention model (``core.node.shard_costed``) and the same batched
+    knob grid runs against the contended compiled form.  Rows against
+    single-core measurements are only comparable at ``n_cores=1``; the
+    extra counts chart the knob grid's scaling behaviour (and ``best``
+    is picked among the smallest swept core count).
+
     Requires a table built with ``keep_programs=True``."""
     from .compiled import O3Knobs, compile_program, schedule_batch
+    from .node import shard_costed
     if not table.programs:
         raise ValueError("sweep_o3 needs kernel_accuracy_table("
                          "keep_programs=True)")
@@ -344,23 +356,35 @@ def sweep_o3(table: AccuracyTable, hw: HardwareSpec,
     combos = [(w, mw, vw, qd) for w in windows for mw in mem_widths
               for vw in vpu_widths for qd in queue_depths]
     knobs = O3Knobs.from_grid(hw, combos)
+    core_counts = tuple(core_counts) or (1,)
     # per-op costs are independent of the O3 knobs: compile each program
-    # ONCE and run the shared array form across the whole grid
-    diffs = np.empty((len(table.programs), knobs.batch))
+    # ONCE per core count and run the shared array form across the grid
+    diffs = np.empty((len(table.programs), len(core_counts), knobs.batch))
     for r, (prog, row) in enumerate(zip(table.programs, table.rows)):
-        cp = compile_program(prog, hw, compute_dtype=compute_dtype)
-        t_us = schedule_batch(cp, knobs, backend=backend) * 1e6
-        diffs[r] = np.abs(t_us - row.measured_us) / row.measured_us * 100.0
+        for ci, n_cores in enumerate(core_counts):
+            if n_cores == 1:
+                cp = compile_program(prog, hw, compute_dtype=compute_dtype)
+            else:
+                costed = shard_costed(prog, hw, n_cores, topology,
+                                      compute_dtype=compute_dtype)
+                cp = compile_program(prog, hw, compute_dtype=compute_dtype,
+                                     costed=costed)
+            t_us = schedule_batch(cp, knobs, backend=backend) * 1e6
+            diffs[r, ci] = np.abs(t_us - row.measured_us) \
+                / row.measured_us * 100.0
     mean_abs = diffs.mean(axis=0)
     within = (diffs <= 10.0).mean(axis=0)
     results: List[Dict] = []
-    for k, (w, mw, vw, qd) in enumerate(combos):
-        results.append({"inflight_window": w, "mem_issue_width": mw,
-                        "vpu_issue_width": vw, "queue_depth": qd,
-                        "mean_abs_diff_pct": float(mean_abs[k]),
-                        "within_10pct": float(within[k])})
+    for ci, n_cores in enumerate(core_counts):
+        for k, (w, mw, vw, qd) in enumerate(combos):
+            results.append({"inflight_window": w, "mem_issue_width": mw,
+                            "vpu_issue_width": vw, "queue_depth": qd,
+                            "n_cores": n_cores,
+                            "mean_abs_diff_pct": float(mean_abs[ci, k]),
+                            "within_10pct": float(within[ci, k])})
     results.sort(key=lambda r: r["mean_abs_diff_pct"])
-    best = results[0]
+    min_cores = min(core_counts)
+    best = next(r for r in results if r["n_cores"] == min_cores)
     tuned = _knob_spec(hw, best["inflight_window"], best["mem_issue_width"],
                        best["vpu_issue_width"], best["queue_depth"])
     return O3Sweep(results=results, best=tuned)
@@ -373,12 +397,13 @@ class O3Sweep:
 
     def report(self, top: int = 8) -> str:
         lines = [f"{'window':>7s}{'mem_w':>7s}{'vpu_w':>7s}{'qdepth':>7s}"
-                 f"{'mean|.|%':>10s}{'<=10%':>7s}"]
+                 f"{'cores':>7s}{'mean|.|%':>10s}{'<=10%':>7s}"]
         for r in self.results[:top]:
             lines.append(f"{r['inflight_window']:>7d}"
                          f"{r['mem_issue_width']:>7d}"
                          f"{r.get('vpu_issue_width', 1):>7d}"
                          f"{r['queue_depth']:>7d}"
+                         f"{r.get('n_cores', 1):>7d}"
                          f"{r['mean_abs_diff_pct']:>10.1f}"
                          f"{100 * r['within_10pct']:>6.0f}%")
         return "\n".join(lines)

@@ -80,6 +80,19 @@ def cost_op(o: OpStat, hw: HardwareSpec, ici_bw: float,
         return sum(v * hw.opcode_factor.get(k, hw.transcendental_factor)
                    for k, v in o.trans_by_opcode.items())
 
+    def vpu_extra() -> float:
+        """Extra flop-equivalents for non-transcendental opcodes with a
+        per-opcode latency entry (minimum/round/convert/...): each element
+        already contributes 1 flop to ``o.flops``; a factor f adds the
+        remaining f-1.  Opcodes without an entry cost exactly 1 flop, so
+        an empty table reproduces the old times bit-for-bit."""
+        extra = 0.0
+        for k, v in o.vpu_by_opcode.items():
+            f = hw.opcode_factor.get(k)
+            if f is not None:
+                extra += v * (f - 1.0)
+        return extra
+
     if traffic is None and o.opclass != "collective":
         traffic = route_standalone(o, hw.memory_hierarchy(), compute_dtype,
                                    warm_caches=hw.warm_caches)
@@ -114,7 +127,7 @@ def cost_op(o: OpStat, hw: HardwareSpec, ici_bw: float,
         t_m = traffic.t_mem
     elif o.opclass in ("elementwise", "reduce"):
         base = o.flops - o.transcendentals
-        t_c = (base + trans_time()) / hw.vector_flops(eff_dtype())
+        t_c = (base + vpu_extra() + trans_time()) / hw.vector_flops(eff_dtype())
         t_m = traffic.t_mem
     elif o.opclass == "transcendental":
         t_c = trans_time() / hw.vector_flops(eff_dtype())

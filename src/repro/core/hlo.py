@@ -117,6 +117,11 @@ class OpStat:
     # transcendental element counts by HLO opcode (survives fusion), so the
     # engine can apply the paper-style per-opcode latency table
     trans_by_opcode: Dict[str, float] = field(default_factory=dict)
+    # plain-elementwise element counts by HLO opcode (survives fusion):
+    # lets `opcode_factor` distinguish e.g. minimum/round/convert from a
+    # 1-flop add — the per-OpClass VPU latency table for non-
+    # transcendental opcodes (DESIGN.md §14 satellite)
+    vpu_by_opcode: Dict[str, float] = field(default_factory=dict)
     # def-use edges: indices into Program.ops of the producers this op
     # consumes (resolved through free/pass-through ops and computation
     # boundaries).  The schedule engine turns these into issue constraints;
@@ -646,6 +651,7 @@ def _cost_computation(comp: Computation, comps: Dict[str, Computation],
             flops = trans = 0.0
             dot_dims = None
             tbo: Dict[str, float] = defaultdict(float)
+            vbo: Dict[str, float] = defaultdict(float)
             callee_comp = comps.get(callee) if callee else None
             if callee_comp is not None:
                 inner: List[OpStat] = []
@@ -656,6 +662,8 @@ def _cost_computation(comp: Computation, comps: Dict[str, Computation],
                     trans += o.transcendentals * o.count
                     for k, v in o.trans_by_opcode.items():
                         tbo[k] += v * o.count
+                    for k, v in o.vpu_by_opcode.items():
+                        vbo[k] += v * o.count
                     if o.dot_dims is not None:
                         dot_dims = o.dot_dims
             rd_b, wr_b = _fusion_boundary_bytes(instr, comp, callee_comp)
@@ -666,6 +674,7 @@ def _cost_computation(comp: Computation, comps: Dict[str, Computation],
                               bytes_accessed=rd_b + wr_b, read_bytes=rd_b,
                               write_bytes=wr_b, count=mult,
                               dot_dims=dot_dims, trans_by_opcode=dict(tbo),
+                              vpu_by_opcode=dict(vbo),
                               deps=deps, dep_bytes=dep_b))
             producer[name] = [len(out) - 1]
             continue
@@ -785,6 +794,7 @@ def _cost_computation(comp: Computation, comps: Dict[str, Computation],
             stat.trans_by_opcode = {opcode: float(nelems)}
         elif cls == "elementwise":
             stat.flops = float(nelems)
+            stat.vpu_by_opcode = {opcode: float(nelems)}
         elif cls == "reduce":
             stat.flops = float(in_b / max(DTYPE_BYTES.get(instr.dtype, 4), 1))
         elif cls == "collective":

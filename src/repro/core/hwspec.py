@@ -13,7 +13,13 @@ same kinds of knobs for our targets:
   its parameters are *fitted* by ``core.calibrate`` exactly the way RIKEN
   tuned gem5 against Fujitsu's numbers.
 
-All throughputs are per chip; meshes scale them by chip count.
+Throughputs are per *modeled unit* — per chip for the TPU specs (meshes
+scale them by chip count), per **core** for ``A64FX_CORE``/``CPU_HOST``.
+A per-core spec plus a :class:`NodeTopology` (CMG counts, per-level
+aggregate bandwidths shared by ``MemLevel.shared_by`` cores, inter-CMG
+ring) is what the multi-core node engine (``core.node``, DESIGN.md §14)
+scales up to one full processor: per-core paths stay the single-core draw
+limits, the topology caps what the sharing domain can deliver in total.
 
 Memory is a real multi-level hierarchy (``core.memory``, DESIGN.md §12):
 ``memory_hierarchy()`` returns the ordered ``MemLevel`` list, innermost
@@ -28,7 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 from .memory import MemLevel
 
@@ -36,6 +42,48 @@ from .memory import MemLevel
 # them onto mem_levels so that e.g. with_(hbm_write_bw=x) always matters
 _INNER_SCALARS = ("vmem_bytes", "vmem_bw")
 _OUTER_SCALARS = ("hbm_bytes", "hbm_read_bw", "hbm_write_bw")
+
+
+@dataclass(frozen=True)
+class NodeTopology:
+    """Node-level structure for the multi-core engine (``core.node``).
+
+    Cores are numbered compactly: core ``c`` lives on CMG
+    ``c // cores_per_cmg`` (OpenMP "close" pinning), so a 12-core run
+    fills one CMG — the paper's Figs 4/5 thread-scaling setup.  For each
+    memory level whose ``MemLevel.shared_by > 1``, the sharing domain is
+    the block of ``shared_by`` consecutive cores, and the aggregate
+    bandwidth the domain can draw is capped by ``shared_read_bw`` /
+    ``shared_write_bw`` (keyed by level name).  Levels with no entry are
+    contention-free: each core keeps its full per-core path.
+    """
+    name: str
+    n_cmgs: int
+    cores_per_cmg: int
+    # aggregate bytes/s one sharing domain can draw at a level; absent
+    # level names mean "no shared cap" (private or never saturated)
+    shared_read_bw: Dict[str, float] = field(default_factory=dict)
+    shared_write_bw: Dict[str, float] = field(default_factory=dict)
+    # inter-CMG ring: a def-use edge crossing CMGs delays the consumer's
+    # readiness by ring_latency_s (coherence hop; bytes are not re-charged
+    # — the producer already paid the store path)
+    ring_latency_s: float = 0.0
+    ring_bw: float = 0.0
+
+    @property
+    def n_cores(self) -> int:
+        return self.n_cmgs * self.cores_per_cmg
+
+    def cmg_of(self, core: int) -> int:
+        return core // self.cores_per_cmg
+
+    @classmethod
+    def degenerate(cls, n_cores: int) -> "NodeTopology":
+        """No shared caps, no ring: n identical fully-private cores.  The
+        node engine under this topology with one core is bit-identical to
+        the single-core schedule (the differential tests pin this)."""
+        return cls(name=f"degenerate_{n_cores}", n_cmgs=1,
+                   cores_per_cmg=n_cores)
 
 
 @dataclass(frozen=True)
@@ -95,6 +143,9 @@ class HardwareSpec:
     # cold traffic streams from the outermost level; only def-use reuse
     # is charged at inner-level bandwidth (DESIGN.md §12).
     warm_caches: bool = False
+    # node structure for the multi-core engine; None = single-unit spec
+    # (core.node falls back to a degenerate contention-free topology)
+    topology: Optional[NodeTopology] = None
 
     def with_(self, **kw) -> "HardwareSpec":
         new = dataclasses.replace(self, **kw)
@@ -194,6 +245,25 @@ TPU_V4 = HardwareSpec(
 # (>900 GB/s/CMG), HBM2 256 GB/s/CMG.
 _A64FX_GHZ = 1.8e9
 _A64FX_CORE_F64 = 2 * 8 * 2 * _A64FX_GHZ        # 57.6 GFLOP/s per core
+
+# Per-opcode VPU latency factors (the paper's per-OpClass instruction
+# latencies, "detailed parameter tuning"): per-element cost relative to a
+# pipelined SVE FMA.  fdiv/fsqrt are unpipelined on the A64FX FLA pipe
+# (~40 cycles / 2 pipes vs a 4-cycle FMA); compare-select pairs take two
+# µops; frint/fcvt chains cost a couple.  Without these, every
+# memory-resident kernel of a class collapses to the same t_est (the
+# BENCH_kernel_suite degeneracy this table fixes).
+_A64FX_OPCODE_FACTOR = {
+    "divide": 20.0, "remainder": 24.0, "sqrt": 18.0, "rsqrt": 18.0,
+    "cbrt": 24.0, "exponential": 6.0, "exponential-minus-one": 7.0,
+    "log": 8.0, "log-plus-one": 9.0, "sine": 10.0, "cosine": 10.0,
+    "tan": 16.0, "atan2": 22.0, "power": 26.0, "tanh": 10.0,
+    "logistic": 9.0, "erf": 9.0, "erf-inv": 14.0,
+    "maximum": 2.0, "minimum": 2.0,
+    "round-nearest-even": 3.0, "round-nearest-afz": 3.0,
+    "floor": 3.0, "ceil": 3.0, "sign": 2.0, "convert": 2.0,
+}
+
 A64FX_CMG = HardwareSpec(
     name="a64fx_cmg",
     peak_flops={"f64": 12 * _A64FX_CORE_F64,
@@ -203,6 +273,7 @@ A64FX_CMG = HardwareSpec(
                "f32": 24 * _A64FX_CORE_F64,
                "default": 12 * _A64FX_CORE_F64},
     transcendental_factor=6.0,          # inlined SVE math functions
+    opcode_factor=dict(_A64FX_OPCODE_FACTOR),
     hbm_read_bw=256e9,
     hbm_write_bw=256e9,
     hbm_bytes=8 * 2**30,
@@ -223,10 +294,26 @@ A64FX_CMG = HardwareSpec(
     op_startup_ns=100.0,
 )
 
+# The full-node structure the per-core spec scales up to: 4 CMGs x 12
+# cores, one 8 MiB L2 (>900 GB/s aggregate) and one HBM2 stack
+# (256 GB/s) per CMG, CMGs linked by the on-chip ring bus.  The node
+# engine divides each shared level's aggregate among the cores actively
+# streaming through it — replacing the old hardcoded "one core gets ~1/4
+# of the CMG's HBM2" approximation with a contention model.
+A64FX_NODE = NodeTopology(
+    name="a64fx_node", n_cmgs=4, cores_per_cmg=12,
+    shared_read_bw={"l2": 900e9, "hbm2": 256e9},
+    shared_write_bw={"l2": 450e9, "hbm2": 256e9},
+    ring_latency_s=130e-9,              # inter-CMG coherence hop
+    ring_bw=115e9,
+)
+
 # One A64FX core (Fig. 3 of the paper is single-core): private L1D with the
-# paper's asymmetric load/store ports, a 1/12 share of the L2, and a
-# single-core draw on the shared CMG HBM2 (~1/4 of the 256 GB/s, store path
-# at the L1 2:1 ratio).
+# paper's asymmetric load/store ports, a 1/12 share of the L2 capacity, and
+# the single-core draw limits on the shared CMG paths (~1/4 of the
+# 256 GB/s HBM2, store path at the L1 2:1 ratio).  ``shared_by`` marks the
+# L2/HBM2 paths as CMG-shared; ``topology`` carries the aggregates the
+# node engine divides among active cores.
 A64FX_CORE = A64FX_CMG.with_(
     name="a64fx_core",
     peak_flops={"f64": _A64FX_CORE_F64, "f32": 2 * _A64FX_CORE_F64,
@@ -242,9 +329,10 @@ A64FX_CORE = A64FX_CMG.with_(
     # below the L1 ports it front-ends
     mem_levels=(
         MemLevel("l1d", 64 * 2**10, 230e9, 115e9, 2.8e-9),
-        MemLevel("l2", 8 * 2**20 // 12, 200e9, 100e9, 20e-9),
-        MemLevel("hbm2", 8 * 2**30, 64e9, 32e9, 120e-9),
+        MemLevel("l2", 8 * 2**20 // 12, 200e9, 100e9, 20e-9, shared_by=12),
+        MemLevel("hbm2", 8 * 2**30, 64e9, 32e9, 120e-9, shared_by=12),
     ),
+    topology=A64FX_NODE,
     dma_overlap=1.0,                    # loads are pipelined under FMA issue
     op_startup_ns=50.0,
 )
@@ -257,6 +345,16 @@ CPU_HOST = HardwareSpec(
     peak_flops={"f64": 5e10, "f32": 1e11, "default": 5e10},
     vpu_flops={"f64": 5e10, "f32": 1e11, "default": 5e10},
     transcendental_factor=10.0,
+    # fallback per-opcode latency table (libm call costs dominate on a
+    # host CPU); core.calibrate re-fits the transcendental entries from
+    # microbenchmarks and keeps the rest
+    opcode_factor={
+        "divide": 40.0, "remainder": 45.0, "sqrt": 35.0, "rsqrt": 40.0,
+        "exponential": 90.0, "log": 80.0, "sine": 110.0, "cosine": 110.0,
+        "tan": 180.0, "atan2": 260.0, "power": 220.0, "tanh": 100.0,
+        "logistic": 100.0, "erf": 100.0,
+        "maximum": 1.5, "minimum": 1.5, "round-nearest-even": 3.0,
+    },
     hbm_read_bw=2e10,
     hbm_write_bw=1.5e10,
     hbm_bytes=16 * 2**30,

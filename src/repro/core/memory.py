@@ -47,13 +47,22 @@ from .hlo import OpStat, Program
 
 @dataclass(frozen=True)
 class MemLevel:
-    """One level of the hierarchy (the gem5 cache/memobj parameter file)."""
+    """One level of the hierarchy (the gem5 cache/memobj parameter file).
+
+    ``read_bw``/``write_bw`` are the *per-core* paths (what one core can
+    draw through the level alone).  ``shared_by`` is the size of the
+    sharing domain in a node (1 = core-private, 12 = one A64FX CMG's L2/
+    HBM2): the node engine (``core.node``) divides the domain's aggregate
+    bandwidth — carried by ``NodeTopology`` — among the cores actively
+    streaming through the level.  Single-core engines ignore it.
+    """
     name: str
     capacity: float              # bytes held at this level
     read_bw: float               # bytes/s toward the core (load path)
     write_bw: float              # bytes/s away from the core (store path)
     latency_s: float = 0.0       # access latency, charged once per op
                                  # at the deepest level the op touches
+    shared_by: int = 1           # cores sharing this level in a node
 
 
 @dataclass

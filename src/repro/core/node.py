@@ -1,0 +1,695 @@
+"""Multi-core node engine — contention-aware scheduling across CMG cores.
+
+The paper's stated target is the execution time of *one node* application;
+PRs 1-3 built a per-kernel cost model (one core, or one core drawing a
+hardcoded share of the CMG's bandwidth).  This module is the node layer
+on top of the compiled SoA core (DESIGN.md §14):
+
+* a per-core ``HardwareSpec`` plus a :class:`~.hwspec.NodeTopology`
+  describe the node: per-core paths are single-core draw limits,
+  ``MemLevel.shared_by`` marks CMG-shared levels, the topology carries
+  each sharing domain's aggregate bandwidth and the inter-CMG ring;
+* a costed :class:`~.hlo.Program` is partitioned across cores —
+  op-level round-robin, a def-use-aware greedy graph partition, or
+  OpenMP-style data-parallel sharding (every core runs the whole program
+  at ``1/n_cores`` of the work, the kernel-suite mode);
+* one in-order stream per core runs through the existing compiled
+  machinery (per-``(core, port)`` pipes, per-core ROB windows and
+  reservation queues — the same float ops as ``schedule_arrays``, which
+  is why ``n_cores=1`` under a degenerate topology is bit-identical to
+  the single-core fast path), with readiness propagated globally across
+  cores and cross-CMG def-use edges charged the ring latency;
+* a bandwidth-contention fixpoint divides each shared level's aggregate
+  among the cores actively streaming through it: the concurrently-active
+  estimate ``n_active = clamp(sum_c busy_c / t_node, 1, cores)`` feeds
+  back into per-op memory times (reusing ``route_program``'s per-level
+  residency split) until it stabilizes.
+
+``schedule_node`` returns a :class:`NodeResult`: per-core timelines, a
+node-level :class:`~.schedule.ScheduleResult`, per-CMG contention/
+occupancy, and the zero-contention bound (the fixpoint's first
+iteration), so every estimate ships with its own sandwich
+``t_zero_contention <= t_est <= t_single_core`` (asserted by the node
+test harness).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .compiled import PORTS, CompiledProgram, compile_program
+from .cost import OpTime, cost_program
+from .hlo import Program
+from .hwspec import HardwareSpec, NodeTopology
+from .schedule import ScheduleResult
+
+_NODE_CACHE_SIZE = 8
+
+
+def effective_bandwidth(core_bw, shared_bw, n_active):
+    """Per-core effective bandwidth at a shared level: the single-core
+    draw limit, capped by an equal share of the domain aggregate among
+    the ``n_active`` cores concurrently streaming through it.  Monotone
+    non-increasing in ``n_active`` (property-tested).  Scalar or
+    elementwise over arrays — ``_eff_inv`` calls this, so the property
+    test binds the engine's actual contention math."""
+    if shared_bw is None:
+        return core_bw
+    return np.minimum(core_bw, shared_bw / np.maximum(n_active, 1.0))
+
+
+# ------------------------------------------------------------ compiled form
+@dataclass
+class NodeCompiled:
+    """Per-(program, spec, dtype) node form: the single-core compiled
+    program plus the per-op/per-level cost decomposition the contention
+    fixpoint rescales (``t_mem = rd @ inv_read + wr @ inv_write + lat``).
+    """
+    cp: CompiledProgram
+    n: int
+    t_comp: np.ndarray           # [n] per-instance compute time
+    t_ici: np.ndarray            # [n]
+    lat: np.ndarray              # [n] hierarchy access latency (uncontended)
+    count: np.ndarray            # [n]
+    rd: np.ndarray               # [n, L] routed read bytes per level
+    wr: np.ndarray               # [n, L] routed write bytes per level
+    level_names: Tuple[str, ...]
+    core_read_bw: np.ndarray     # [L] per-core paths
+    core_write_bw: np.ndarray
+    shared_by: np.ndarray        # [L] sharing-domain size per level
+    startup: float
+    costed_mask: np.ndarray = None   # [n] bool: port_id >= 0
+
+
+def compile_node(prog: Program, hw: HardwareSpec,
+                 links_per_collective: int = 2,
+                 compute_dtype: Optional[str] = None,
+                 costed: Optional[List[Optional[OpTime]]] = None
+                 ) -> NodeCompiled:
+    """Compile (and memoize on the Program) the node form.  A caller-
+    supplied ``costed`` list bypasses the cache, mirroring
+    ``compile_program``."""
+    if costed is None:
+        cache = prog.__dict__.setdefault("_node_cache", [])
+        for chw, cdt, clk, cnc in cache:
+            if chw is hw and cdt == compute_dtype \
+                    and clk == links_per_collective:
+                return cnc
+        costed = cost_program(prog, hw, links_per_collective, compute_dtype)
+    else:
+        cache = None
+    cp = compile_program(prog, hw, links_per_collective, compute_dtype,
+                         costed=costed)
+    levels = hw.memory_hierarchy()
+    L = len(levels)
+    n = len(prog.ops)
+    lidx = {lv.name: i for i, lv in enumerate(levels)}
+    t_comp = np.zeros(n)
+    t_ici = np.zeros(n)
+    lat = np.zeros(n)
+    count = np.ones(n)
+    rd = np.zeros((n, L))
+    wr = np.zeros((n, L))
+    for i, ot in enumerate(costed):
+        if ot is None:
+            continue
+        t_comp[i] = ot.t_compute
+        t_ici[i] = ot.t_ici
+        count[i] = ot.op.count
+        tr = ot.traffic
+        if tr is not None:
+            lat[i] = tr.latency_s
+            for nm, b in tr.read_by_level.items():
+                rd[i, lidx[nm]] = b
+            for nm, b in tr.write_by_level.items():
+                wr[i, lidx[nm]] = b
+    nc = NodeCompiled(
+        cp=cp, n=n, t_comp=t_comp, t_ici=t_ici, lat=lat, count=count,
+        rd=rd, wr=wr, level_names=tuple(lv.name for lv in levels),
+        core_read_bw=np.array([lv.read_bw for lv in levels]),
+        core_write_bw=np.array([lv.write_bw for lv in levels]),
+        shared_by=np.array([max(1, lv.shared_by) for lv in levels],
+                           dtype=np.int64),
+        startup=hw.op_startup_ns * 1e-9,
+        costed_mask=cp.port_id >= 0,
+    )
+    if cache is not None:
+        cache.append((hw, compute_dtype, links_per_collective, nc))
+        if len(cache) > _NODE_CACHE_SIZE:
+            cache.pop(0)
+    return nc
+
+
+# ------------------------------------------------------------- partitioning
+def partition_round_robin(n: int, n_cores: int) -> np.ndarray:
+    """Op-level round-robin over program order (free ops included: they
+    occupy their core's ROB slots exactly like the single-core kernels)."""
+    return np.arange(n, dtype=np.int64) % max(1, n_cores)
+
+
+def partition_graph(nc: NodeCompiled, n_cores: int,
+                    balance: float = 1.25) -> np.ndarray:
+    """Def-use-aware greedy partition: follow each op's heaviest producer
+    onto its core while that core's load stays under ``balance`` x the
+    even share, else fall to the least-loaded core.  Keeps dependence
+    chains co-located (fewer cross-core readiness waits and ring hops)
+    while bounding imbalance.  Deterministic."""
+    n_cores = max(1, n_cores)
+    durs = nc.cp._dur_l
+    indptr = nc.cp._indptr_l
+    indices = nc.cp._indices_l
+    core_of = np.zeros(nc.n, dtype=np.int64)
+    load = [0.0] * n_cores
+    cap = balance * (sum(durs) / n_cores) + 1e-30
+    for i in range(nc.n):
+        pref = -1
+        best = -1.0
+        for k in range(indptr[i], indptr[i + 1]):
+            j = indices[k]
+            if durs[j] > best:
+                best, pref = durs[j], int(core_of[j])
+        if pref < 0 or load[pref] + durs[i] > cap:
+            pref = min(range(n_cores), key=load.__getitem__)
+        core_of[i] = pref
+        load[pref] += durs[i]
+    return core_of
+
+
+# ------------------------------------------------------- the node scheduler
+def _node_pass(durs, ports, indptr, indices, core_of, cmg_of_core,
+               widths, depths, window, ring_lat):
+    """One global in-order pass over the ops with per-(core, port) pipes,
+    per-core ROB windows and reservation queues, and globally-propagated
+    readiness (+ ring latency on cross-CMG def-use edges).  With one core
+    this replays ``schedule_arrays``'s float operations in the same
+    order, hence bit-identical results (the differential tests pin it).
+    """
+    n = len(durs)
+    P = len(PORTS)
+    n_cores = len(cmg_of_core)
+    finishes = [0.0] * n
+    starts = [0.0] * n
+    rt_tail = [0.0] * n_cores                 # per-core worst retire seen
+    rt_hist: List[List[float]] = [[] for _ in range(n_cores)]
+    pipes: List[List[Optional[List[float]]]] = \
+        [[None] * P for _ in range(n_cores)]
+    hist: List[List[Optional[List[float]]]] = \
+        [[None] * P for _ in range(n_cores)]
+    core_busy = [[0.0] * P for _ in range(n_cores)]
+    core_finish = [0.0] * n_cores
+    core_nops = [0] * n_cores
+    s_port = s_window = s_queue = 0.0
+    t_est = 0.0
+    use_ring = ring_lat > 0.0 and n_cores > 1
+    # a value's home CMG: where it was produced.  Free ops (gte/bitcast/
+    # tuple) are pass-throughs — they inherit their binding producer's
+    # home and charge no hop themselves, so data consumed on its own CMG
+    # through a scattered free op pays no phantom ring latency
+    home = [0] * n if use_ring else None
+
+    for i in range(n):
+        c = core_of[i]
+        p = ports[i]
+        ready = 0.0
+        if use_ring:
+            mycmg = cmg_of_core[c]
+            if p < 0:
+                for k in range(indptr[i], indptr[i + 1]):
+                    f = finishes[indices[k]]
+                    if f > ready:
+                        ready = f
+                # home = first producer's (static, so the scheduler and
+                # _dataflow always agree; gte/bitcast have exactly one)
+                home[i] = (home[indices[indptr[i]]]
+                           if indptr[i + 1] > indptr[i] else mycmg)
+            else:
+                for k in range(indptr[i], indptr[i + 1]):
+                    j = indices[k]
+                    f = finishes[j]
+                    if home[j] != mycmg:
+                        f += ring_lat
+                    if f > ready:
+                        ready = f
+                home[i] = mycmg
+        else:
+            for k in range(indptr[i], indptr[i + 1]):
+                f = finishes[indices[k]]
+                if f > ready:
+                    ready = f
+        crt = rt_hist[c]
+        if p < 0:
+            # free op: propagate readiness at zero cost; occupies a ROB slot
+            finishes[i] = ready
+            starts[i] = ready
+            rp = rt_tail[c]
+            if ready > rp:
+                rp = ready
+                rt_tail[c] = rp
+            crt.append(rp)
+            continue
+        pl = pipes[c][p]
+        if pl is None:
+            pl = pipes[c][p] = [0.0] * widths[p]
+            hist[c][p] = []
+        start = ready
+        why = 0
+        pf = min(pl)
+        if pf > start:
+            start, why = pf, 1
+        pos = len(crt)
+        if pos >= window:
+            wt = crt[pos - window]
+            if wt > start:
+                start, why = wt, 2
+        h = hist[c][p]
+        d = depths[p]
+        if len(h) >= d:
+            qt = h[-d]
+            if qt > start:
+                start, why = qt, 3
+        finish = start + durs[i]
+        pl[pl.index(pf)] = finish
+        h.append(start)
+        finishes[i] = finish
+        starts[i] = start
+        rp = rt_tail[c]
+        if finish > rp:
+            rp = finish
+            rt_tail[c] = rp
+        crt.append(rp)
+        if finish > t_est:
+            t_est = finish
+        if finish > core_finish[c]:
+            core_finish[c] = finish
+        core_busy[c][p] += durs[i]
+        core_nops[c] += 1
+        if start > ready:
+            dt = start - ready
+            if why == 1:
+                s_port += dt
+            elif why == 2:
+                s_window += dt
+            else:
+                s_queue += dt
+
+    stall: Dict[str, float] = {}
+    if s_port > 0:
+        stall["port"] = s_port
+    if s_window > 0:
+        stall["window"] = s_window
+    if s_queue > 0:
+        stall["queue"] = s_queue
+    return (t_est, stall, starts, finishes, core_busy, core_finish,
+            core_nops)
+
+
+def _dataflow(durs, ports, indptr, indices, core_of, cmg_of_core, ring_lat):
+    """Infinite-resource critical path of the partitioned program,
+    ring-latency edges included — the node schedule can never beat it.
+    Mirrors the scheduler's ring rules: hops are charged against a
+    value's HOME CMG (free pass-through ops inherit, not relay), and the
+    makespan is the max over *costed* ops (free ops take no time, so a
+    hop into a terminal free op is phantom, exactly as in t_est)."""
+    n = len(durs)
+    length = [0.0] * n
+    t_df = 0.0
+    use_ring = ring_lat > 0.0 and len(cmg_of_core) > 1
+    home = [0] * n if use_ring else None
+    for i in range(n):
+        best = 0.0
+        if use_ring:
+            mycmg = cmg_of_core[core_of[i]]
+            if ports[i] < 0:
+                for k in range(indptr[i], indptr[i + 1]):
+                    v = length[indices[k]]
+                    if v > best:
+                        best = v
+                home[i] = (home[indices[indptr[i]]]
+                           if indptr[i + 1] > indptr[i] else mycmg)
+            else:
+                for k in range(indptr[i], indptr[i + 1]):
+                    j = indices[k]
+                    v = length[j]
+                    if home[j] != mycmg:
+                        v += ring_lat
+                    if v > best:
+                        best = v
+                home[i] = mycmg
+        else:
+            for k in range(indptr[i], indptr[i + 1]):
+                v = length[indices[k]]
+                if v > best:
+                    best = v
+        length[i] = durs[i] + best
+        if ports[i] >= 0 and length[i] > t_df:
+            t_df = length[i]
+    return t_df
+
+
+# ------------------------------------------------------------------ results
+@dataclass
+class CoreStat:
+    core: int
+    cmg: int
+    t_finish: float              # last finish on this core
+    port_busy: Dict[str, float]
+    n_ops: int
+
+
+@dataclass
+class CmgStat:
+    cmg: int
+    n_cores: int                 # cores of this CMG used by the run
+    n_active: Dict[str, float]   # level -> concurrently-active estimate
+    eff_read_bw: Dict[str, float]    # per-core effective bytes/s
+    eff_write_bw: Dict[str, float]
+    occupancy: float             # max core-busy fraction of node makespan
+
+
+@dataclass
+class NodeResult:
+    """Per-core timelines + node-level schedule + contention report."""
+    t_est: float
+    n_cores: int
+    partition: str
+    topology: NodeTopology
+    schedule: ScheduleResult     # node-level aggregate
+    per_core: List[CoreStat]
+    per_cmg: List[CmgStat]
+    t_zero_contention: float     # fixpoint iteration 0 (all levels at the
+                                 # per-core draw limit): the lower bound
+    iterations: int
+    core_of: np.ndarray = field(repr=False, default=None)
+    starts: np.ndarray = field(repr=False, default=None)
+    finishes: np.ndarray = field(repr=False, default=None)
+
+    @property
+    def parallel_efficiency(self) -> float:
+        """Busy time across cores / (n_cores x makespan)."""
+        if self.t_est <= 0 or not self.per_core:
+            return 1.0
+        busy = sum(sum(c.port_busy.values()) for c in self.per_core)
+        return busy / (len(self.per_core) * self.t_est)
+
+
+# --------------------------------------------------------------- the engine
+def _eff_inv(nc: NodeCompiled, topo: NodeTopology, cores: np.ndarray,
+             n_active: List[np.ndarray]) -> Tuple[np.ndarray, np.ndarray]:
+    """[k, L] inverse effective read/write bandwidth per used core."""
+    k = len(cores)
+    L = len(nc.level_names)
+    inv_r = np.empty((k, L))
+    inv_w = np.empty((k, L))
+    for li, name in enumerate(nc.level_names):
+        dom = cores // nc.shared_by[li]
+        na = n_active[li][dom]
+        inv_r[:, li] = 1.0 / effective_bandwidth(
+            nc.core_read_bw[li], topo.shared_read_bw.get(name), na)
+        inv_w[:, li] = 1.0 / effective_bandwidth(
+            nc.core_write_bw[li], topo.shared_write_bw.get(name), na)
+    return inv_r, inv_w
+
+
+def _contended_durs(nc: NodeCompiled, inv_r_op: np.ndarray,
+                    inv_w_op: np.ndarray, scale: float) -> List[float]:
+    """Per-op durations under the given per-op inverse bandwidths; work
+    (flops/bytes/payload) scaled by ``scale`` (sharding), latency and
+    startup unscaled (every core still issues its slice of each op)."""
+    t_mem = ((nc.rd * inv_r_op).sum(axis=1)
+             + (nc.wr * inv_w_op).sum(axis=1)) * scale + nc.lat
+    per = np.maximum(np.maximum(nc.t_comp * scale, t_mem),
+                     nc.t_ici * scale)
+    durs = (per + nc.startup) * nc.count
+    # uncosted ops must stay zero-duration free ops
+    durs[~nc.costed_mask] = 0.0
+    return durs.tolist()
+
+
+def schedule_node(nc: NodeCompiled, hw: HardwareSpec, n_cores: int,
+                  topology: Optional[NodeTopology] = None,
+                  partition: str = "round-robin",
+                  core_of: Optional[np.ndarray] = None,
+                  max_iters: int = 8, tol: float = 1e-2) -> NodeResult:
+    """Schedule the compiled node form on ``n_cores`` cores.
+
+    ``partition``: ``"round-robin"`` | ``"graph"`` | ``"shard"`` (every
+    core runs the whole program at 1/n_cores of the work — the OpenMP
+    thread-scaling mode the kernel suite reports), or pass an explicit
+    ``core_of`` array.  The contention fixpoint starts uncontended (its
+    first pass IS the zero-contention bound); the first update jumps
+    straight to the measured concurrently-active estimate (fully
+    mem-bound programs converge in one step because busy and makespan
+    rescale together), later updates are 0.5-damped against oscillation,
+    and the loop stops when the estimate moves less than ``tol`` cores.
+    """
+    topo = topology or hw.topology or NodeTopology.degenerate(n_cores)
+    if n_cores < 1 or n_cores > max(topo.n_cores, 1):
+        raise ValueError(f"n_cores={n_cores} outside topology "
+                         f"{topo.name} (max {topo.n_cores})")
+    cp = nc.cp
+    widths = [max(1, hw.issue_width.get(p, 1)) for p in PORTS]
+    depths = [max(1, hw.queue_depth.get(p, 1)) for p in PORTS]
+    window = max(1, hw.inflight_window)
+    L = len(nc.level_names)
+    shard = partition == "shard"
+    scale = (1.0 / n_cores) if shard else 1.0
+
+    # cores used by this run (compact pinning: CMG c//cores_per_cmg)
+    cores = np.arange(n_cores, dtype=np.int64)
+    cmg_of_used = (cores // max(1, topo.cores_per_cmg)).tolist()
+    if shard:
+        sched_core_of = np.zeros(nc.n, dtype=np.int64)
+        sched_cmgs = [0]
+    elif core_of is not None:
+        sched_core_of = np.asarray(core_of, dtype=np.int64)
+        sched_cmgs = cmg_of_used
+    elif partition == "graph":
+        sched_core_of = partition_graph(nc, n_cores)
+        sched_cmgs = cmg_of_used
+    elif partition == "round-robin":
+        sched_core_of = partition_round_robin(nc.n, n_cores)
+        sched_cmgs = cmg_of_used
+    else:
+        raise ValueError(f"unknown partition {partition!r}")
+    core_of_l = sched_core_of.tolist()
+
+    # a level is contended only when the topology caps it AND >1 core
+    # shares the domain; otherwise the fixpoint is a single exact pass
+    has_caps = any(nm in topo.shared_read_bw or nm in topo.shared_write_bw
+                   for nm in nc.level_names)
+    contended = has_caps and n_cores > 1
+
+    # concurrently-active estimate per (level, sharing domain)
+    n_active = [np.ones(int(np.ceil(n_cores / nc.shared_by[li])))
+                for li in range(L)]
+    # cores of each domain that actually have costed work
+    port_arr = np.asarray(nc.cp._port_l)
+    if shard:
+        work_cores = cores          # every virtual core runs the stream
+    else:
+        has_work = np.zeros(n_cores, dtype=bool)
+        has_work[sched_core_of[port_arr >= 0]] = True
+        work_cores = cores[has_work[cores]]
+    active_per_dom = [np.maximum(np.bincount(
+        work_cores // nc.shared_by[li],
+        minlength=len(n_active[li])).astype(float), 1.0)
+        for li in range(L)]
+
+    ring_lat = topo.ring_latency_s if not shard else 0.0
+    ports_l = cp._port_l
+    indptr_l = cp._indptr_l
+    indices_l = cp._indices_l
+
+    t_zero = None
+    iterations = 0
+    counts = nc.count
+    final = not contended
+    while True:
+        iterations += 1
+        uncontended = all(float(a.max(initial=1.0)) <= 1.0
+                          for a in n_active)
+        if uncontended and scale == 1.0:
+            # exact path: reuse the single-core compiled durations
+            # bit-for-bit (recomposing t_mem from the per-level split
+            # reassociates float adds)
+            durs = cp._dur_l
+            inv_r = inv_w = None
+        else:
+            inv_r, inv_w = _eff_inv(nc, topo, cores, n_active)
+            if shard:
+                # every virtual core runs the stream; core 0 sits in the
+                # fullest sharing domain (compact pinning), so its
+                # bandwidths govern the makespan
+                row, row_w = inv_r[0], inv_w[0]
+            else:
+                row, row_w = inv_r[sched_core_of], inv_w[sched_core_of]
+            durs = _contended_durs(nc, row, row_w, scale)
+        res = _node_pass(durs, ports_l, indptr_l, indices_l, core_of_l,
+                         sched_cmgs, widths, depths, window, ring_lat)
+        t_node = res[0]
+        if t_zero is None:
+            t_zero = t_node
+        if final:
+            break
+        # analytic per-core level-busy under the bandwidths just used
+        if inv_r is None:
+            inv_r, inv_w = _eff_inv(nc, topo, cores, n_active)
+        stream_inv_r = inv_r[0] if shard else inv_r[sched_core_of]
+        stream_inv_w = inv_w[0] if shard else inv_w[sched_core_of]
+        contrib = (nc.rd * stream_inv_r + nc.wr * stream_inv_w) \
+            * (scale * counts)[:, None]
+        if shard:
+            core_level_busy = np.broadcast_to(contrib.sum(axis=0),
+                                              (n_cores, L))
+        else:
+            core_level_busy = np.zeros((n_cores, L))
+            np.add.at(core_level_busy, sched_core_of, contrib)
+        delta = 0.0
+        new_active = []
+        damp = 0.5 if iterations > 1 else 1.0
+        for li in range(L):
+            dom_busy = np.bincount(cores // nc.shared_by[li],
+                                   weights=core_level_busy[:, li],
+                                   minlength=len(n_active[li]))
+            target = np.clip(dom_busy / max(t_node, 1e-30), 1.0,
+                             active_per_dom[li])
+            nxt = damp * target + (1.0 - damp) * n_active[li]
+            delta = max(delta, float(np.abs(nxt - n_active[li]).max(
+                initial=0.0)))
+            new_active.append(nxt)
+        n_active = new_active
+        if delta == 0.0:
+            # n_active (hence durations) unchanged: the pass just taken
+            # IS the converged schedule — no re-run needed (the common
+            # compute-bound case, where every target clamps to 1)
+            break
+        # once the estimate stops moving (or the budget runs out), one
+        # last pass of the same block above runs under the converged
+        # n_active and breaks
+        final = delta < tol or iterations >= max_iters
+
+    t_est, stall, starts, finishes, core_busy, core_finish, core_nops = res
+
+    # --- node-level ScheduleResult.  In shard mode the pass scheduled ONE
+    # representative stream; every core runs it, so node aggregates
+    # (port_busy / t_serial / n_ops) scale by n_cores — keeping their
+    # semantics identical to the op-partition modes, where the pass
+    # already covers all cores.
+    agg = float(n_cores) if shard else 1.0
+    port_busy: Dict[str, float] = {}
+    for cb in core_busy:
+        for pid, b in enumerate(cb):
+            if b > 0:
+                port_busy[PORTS[pid]] = port_busy.get(PORTS[pid], 0.0) \
+                    + b * agg
+    # schedule-consistent lower bound: busiest (core, port) pipe
+    per_core_roof = max((b / widths[pid]
+                         for cb in core_busy for pid, b in enumerate(cb)
+                         if b > 0), default=0.0)
+    t_serial = float(sum(durs)) * agg
+    t_dataflow = _dataflow(durs, ports_l, indptr_l, indices_l, core_of_l,
+                           sched_cmgs, ring_lat)
+    sched = ScheduleResult(
+        t_est=t_est, t_roofline=per_core_roof, t_serial=t_serial,
+        t_dataflow=t_dataflow, port_busy=port_busy,
+        n_ops=cp.n_ops * agg, n_edges=cp.n_edges, stall_by_reason=stall,
+        issue_width=dict(hw.issue_width))
+
+    # --- per-core stats (shard: every core runs the representative stream)
+    per_core: List[CoreStat] = []
+    for c in range(n_cores):
+        src = 0 if shard else c
+        per_core.append(CoreStat(
+            core=c, cmg=int(cmg_of_used[c]),
+            t_finish=core_finish[src],
+            port_busy={PORTS[pid]: b for pid, b in
+                       enumerate(core_busy[src]) if b > 0},
+            n_ops=core_nops[src]))
+
+    # --- per-CMG contention report
+    per_cmg: List[CmgStat] = []
+    inv_final = _eff_inv(nc, topo, cores, n_active)
+    mk = max(t_est, 1e-30)
+    for g in range(int(max(cmg_of_used)) + 1):
+        gcores = [c for c in range(n_cores) if cmg_of_used[c] == g]
+        na: Dict[str, float] = {}
+        er: Dict[str, float] = {}
+        ew: Dict[str, float] = {}
+        for li, nm in enumerate(nc.level_names):
+            if nm not in topo.shared_read_bw and \
+                    nm not in topo.shared_write_bw:
+                continue
+            dom = gcores[0] // int(nc.shared_by[li])
+            na[nm] = float(n_active[li][dom])
+            er[nm] = 1.0 / float(inv_final[0][gcores[0], li])
+            ew[nm] = 1.0 / float(inv_final[1][gcores[0], li])
+        occ = max((sum(core_busy[0 if shard else c]) / mk
+                   for c in gcores), default=0.0)
+        per_cmg.append(CmgStat(cmg=g, n_cores=len(gcores), n_active=na,
+                               eff_read_bw=er, eff_write_bw=ew,
+                               occupancy=occ))
+
+    return NodeResult(
+        t_est=t_est, n_cores=n_cores, partition=partition, topology=topo,
+        schedule=sched, per_core=per_core, per_cmg=per_cmg,
+        t_zero_contention=t_zero, iterations=iterations,
+        core_of=sched_core_of, starts=np.asarray(starts),
+        finishes=np.asarray(finishes))
+
+
+def simulate_node(prog: Program, hw: HardwareSpec, n_cores: int,
+                  topology: Optional[NodeTopology] = None,
+                  partition: str = "round-robin",
+                  links_per_collective: int = 2,
+                  compute_dtype: Optional[str] = None,
+                  costed: Optional[List[Optional[OpTime]]] = None,
+                  **kw) -> NodeResult:
+    """Cost + compile + node-schedule in one call (the ``simulate``
+    entry point's ``engine="node"`` backend)."""
+    nc = compile_node(prog, hw, links_per_collective, compute_dtype, costed)
+    return schedule_node(nc, hw, n_cores, topology, partition, **kw)
+
+
+def shard_costed(prog: Program, hw: HardwareSpec, n_cores: int,
+                 topology: Optional[NodeTopology] = None,
+                 links_per_collective: int = 2,
+                 compute_dtype: Optional[str] = None
+                 ) -> List[Optional[OpTime]]:
+    """The shard-mode node model as a costed list: per-op times scaled by
+    1/n_cores with the converged contention applied, suitable for
+    ``compile_program(costed=...)`` — this is how the O3 knob sweep rides
+    ``schedule_batch`` with core count as an extra grid axis (the knob
+    grid batches over one shard-contended compiled program per core
+    count)."""
+    nc = compile_node(prog, hw, links_per_collective, compute_dtype)
+    nr = schedule_node(nc, hw, n_cores, topology, partition="shard")
+    topo = nr.topology
+    cores = np.arange(n_cores, dtype=np.int64)
+    # rebuild the converged per-level inverse bandwidths from the report
+    n_active = []
+    for li, nm in enumerate(nc.level_names):
+        n_dom = int(np.ceil(n_cores / nc.shared_by[li]))
+        na = np.ones(n_dom)
+        for cs in nr.per_cmg:
+            if nm in cs.n_active:
+                na[:] = cs.n_active[nm]
+                break
+        n_active.append(na)
+    inv_r, inv_w = _eff_inv(nc, topo, cores, n_active)
+    scale = 1.0 / n_cores
+    t_mem = ((nc.rd * inv_r[0]).sum(axis=1)
+             + (nc.wr * inv_w[0]).sum(axis=1)) * scale + nc.lat
+    base = cost_program(prog, hw, links_per_collective, compute_dtype)
+    out: List[Optional[OpTime]] = []
+    for i, ot in enumerate(base):
+        if ot is None:
+            out.append(None)
+            continue
+        out.append(dataclasses.replace(
+            ot, t_compute=ot.t_compute * scale,
+            t_mem=float(t_mem[i]) if ot.traffic is not None else 0.0,
+            t_ici=ot.t_ici * scale))
+    return out

@@ -16,6 +16,7 @@ from typing import List, Optional
 
 from .engine import EngineResult
 from .hlo import Program
+from .node import NodeResult
 from .roofline import Roofline
 from .schedule import ScheduleResult
 
@@ -133,14 +134,57 @@ def _schedule_section(sched: ScheduleResult) -> List[str]:
     return lines
 
 
+def _node_section(node: NodeResult) -> List[str]:
+    """Per-CMG contention/occupancy — the node engine's view: how many
+    cores were concurrently streaming through each shared level, and the
+    per-core effective bandwidth that left each of them."""
+    lines = []
+    lines.append(f"  node engine ({node.n_cores} cores, "
+                 f"partition={node.partition}, topology="
+                 f"{node.topology.name}):")
+    lines.append(f"    estimate: {_fmt_t(node.t_est)}   zero-contention "
+                 f"bound: {_fmt_t(node.t_zero_contention)}   "
+                 f"dataflow: {_fmt_t(node.schedule.t_dataflow)}")
+    lines.append(f"    parallel efficiency: "
+                 f"{100 * node.parallel_efficiency:.1f}%   contention "
+                 f"fixpoint: {node.iterations} iteration(s)")
+    for g in node.per_cmg:
+        if not g.n_active:
+            lines.append(f"    cmg{g.cmg}: {g.n_cores} cores  "
+                         f"occupancy {100 * g.occupancy:5.1f}%  "
+                         f"(no shared-level caps)")
+            continue
+        cont = "  ".join(
+            f"{lv}: {g.n_active[lv]:.1f} active, "
+            f"{g.eff_read_bw[lv] / 1e9:.0f}/"
+            f"{g.eff_write_bw[lv] / 1e9:.0f} GB/s/core"
+            for lv in sorted(g.n_active))
+        lines.append(f"    cmg{g.cmg}: {g.n_cores} cores  occupancy "
+                     f"{100 * g.occupancy:5.1f}%  {cont}")
+    if node.per_core:
+        slow = max(node.per_core, key=lambda c: c.t_finish)
+        fast = min(node.per_core, key=lambda c: c.t_finish)
+        lines.append(f"    imbalance: core{slow.core} finishes at "
+                     f"{_fmt_t(slow.t_finish)} vs core{fast.core} at "
+                     f"{_fmt_t(fast.t_finish)}")
+    return lines
+
+
 def pa_report(rf: Roofline, eng: EngineResult, prog: Program,
               title: str = "", sched: Optional[ScheduleResult] = None,
-              engine_mode: str = "occupancy") -> str:
+              engine_mode: str = "occupancy",
+              node: Optional[NodeResult] = None) -> str:
     lines = []
     lines.append(f"== PA report {title} ==")
-    # headline matches SimReport.t_est: schedule-derived in schedule mode,
-    # occupancy otherwise (labelled when both numbers are in the report)
-    if engine_mode == "schedule" and sched is not None:
+    # headline matches SimReport.t_est: node-derived in node mode,
+    # schedule-derived in schedule mode, occupancy otherwise (labelled
+    # when several numbers are in the report)
+    if engine_mode == "node" and node is not None:
+        lines.append(f"  estimate (node, {node.n_cores} cores): "
+                     f"{_fmt_t(node.t_est)}   occupancy (1 core): "
+                     f"{_fmt_t(eng.t_est)}   zero-contention: "
+                     f"{_fmt_t(node.t_zero_contention)}")
+    elif engine_mode == "schedule" and sched is not None:
         lines.append(f"  estimate (schedule): {_fmt_t(sched.t_est)}   "
                      f"occupancy: {_fmt_t(eng.t_est)}   roofline-bound: "
                      f"{_fmt_t(eng.t_roofline)}   serial: "
@@ -173,6 +217,8 @@ def pa_report(rf: Roofline, eng: EngineResult, prog: Program,
                          f"{comm.get(k, 0) / 2**20:9.1f} MiB")
     if sched is not None:
         lines.extend(_schedule_section(sched))
+    if node is not None:
+        lines.extend(_node_section(node))
     lines.append("  hints:")
     for s in suggestions(rf, eng, prog):
         lines.append(f"    - {s}")

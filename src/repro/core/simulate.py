@@ -18,7 +18,8 @@ from typing import Any, Dict, Optional
 from .cost import cost_program
 from .engine import EngineResult, simulate_program
 from .hlo import Program, parse_program
-from .hwspec import HardwareSpec, TPU_V5E
+from .hwspec import HardwareSpec, NodeTopology, TPU_V5E
+from .node import NodeResult, simulate_node
 from .pa import pa_report
 from .roofline import Roofline, roofline_from_program
 from .schedule import ScheduleResult, schedule_program
@@ -41,11 +42,16 @@ class SimReport:
     # the parsed per-op program (not serialized in to_json) so callers can
     # re-cost/re-schedule without re-parsing the HLO text
     program: Optional[Program] = None
+    # multi-core node engine result (engine="node")
+    node: Optional[NodeResult] = None
 
     @property
     def t_est(self) -> float:
-        """Headline estimate: schedule-derived when the O3 engine ran as
-        the primary mode, flat-occupancy otherwise (both always carried)."""
+        """Headline estimate: node-derived in node mode, schedule-derived
+        when the O3 engine ran as the primary mode, flat-occupancy
+        otherwise (both always carried)."""
+        if self.engine_mode == "node" and self.node is not None:
+            return self.node.t_est
         if self.engine_mode == "schedule" and self.schedule is not None:
             return self.schedule.t_est
         return self.engine.t_est
@@ -88,6 +94,28 @@ class SimReport:
                      "finish": c.finish, "bound_by": c.bound_by}
                     for c in s.critical_path[:32]],
             }
+        if self.node is not None:
+            nr = self.node
+            d["node"] = {
+                "t_est": nr.t_est,
+                "n_cores": nr.n_cores,
+                "partition": nr.partition,
+                "topology": nr.topology.name,
+                "t_zero_contention": nr.t_zero_contention,
+                "iterations": nr.iterations,
+                "parallel_efficiency": nr.parallel_efficiency,
+                "t_serial": nr.schedule.t_serial,
+                "t_dataflow": nr.schedule.t_dataflow,
+                "port_busy": nr.schedule.port_busy,
+                "stall_by_reason": nr.schedule.stall_by_reason,
+                "per_cmg": [
+                    {"cmg": g.cmg, "n_cores": g.n_cores,
+                     "n_active": g.n_active,
+                     "eff_read_bw": g.eff_read_bw,
+                     "eff_write_bw": g.eff_write_bw,
+                     "occupancy": g.occupancy}
+                    for g in nr.per_cmg],
+            }
         return json.dumps(d, indent=1, sort_keys=True)
 
 
@@ -119,7 +147,10 @@ def _cost_stats(compiled) -> Optional[Dict[str, float]]:
 
 def simulate(compiled, hw: HardwareSpec = TPU_V5E, n_chips: int = 1,
              model_flops_global: float = 0.0, compute_dtype: str = "bf16",
-             title: str = "", engine: str = "occupancy") -> SimReport:
+             title: str = "", engine: str = "occupancy",
+             n_cores: int = 1,
+             topology: Optional[NodeTopology] = None,
+             node_partition: str = "round-robin") -> SimReport:
     """``compiled`` is a jax Compiled object, or raw HLO text.
 
     ``engine`` selects the overlap model:
@@ -130,8 +161,14 @@ def simulate(compiled, hw: HardwareSpec = TPU_V5E, n_chips: int = 1,
         the hw issue/window/queue knobs; ``report.t_est`` comes from it.
       * ``"both"``      — run both; ``t_est`` stays occupancy-derived, the
         schedule rides along in ``report.schedule`` for comparison.
+      * ``"node"``      — the multi-core node engine (``core.node``): the
+        program runs on ``n_cores`` cores of ``topology`` (default: the
+        spec's own, else a degenerate contention-free one) under
+        ``node_partition`` ("round-robin" | "graph" | "shard");
+        ``report.t_est`` is the contention-aware node makespan and the PA
+        report gains the per-CMG contention section.
     """
-    if engine not in ("occupancy", "schedule", "both"):
+    if engine not in ("occupancy", "schedule", "both", "node"):
         raise ValueError(f"unknown engine mode {engine!r}")
     if isinstance(compiled, str):
         text = compiled
@@ -150,6 +187,10 @@ def simulate(compiled, hw: HardwareSpec = TPU_V5E, n_chips: int = 1,
     sched = (schedule_program(prog, hw, compute_dtype=compute_dtype,
                               costed=costed, detail=True)
              if engine in ("schedule", "both") else None)
+    node = (simulate_node(prog, hw, n_cores, topology=topology,
+                          partition=node_partition,
+                          compute_dtype=compute_dtype, costed=costed)
+            if engine == "node" else None)
     rf = roofline_from_program(prog, hw, n_chips, model_flops_global,
                                compute_dtype)
     summary = {
@@ -163,6 +204,7 @@ def simulate(compiled, hw: HardwareSpec = TPU_V5E, n_chips: int = 1,
     return SimReport(hw=hw.name, n_chips=n_chips, roofline=rf, engine=eng,
                      program_summary=summary,
                      pa=pa_report(rf, eng, prog, title, sched=sched,
-                                  engine_mode=engine),
+                                  engine_mode=engine, node=node),
                      xla_cost_analysis=cost, memory_analysis=mem,
-                     schedule=sched, engine_mode=engine, program=prog)
+                     schedule=sched, engine_mode=engine, program=prog,
+                     node=node)
