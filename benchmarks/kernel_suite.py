@@ -28,7 +28,7 @@ from repro.configs.a64fx_kernelsuite import (
     KERNELS, PAPER_MEAN_ABS_DIFF_PCT, PAPER_MEAN_DIFF_PCT,
     PAPER_STD_DIFF_PCT, PAPER_WITHIN_10PCT_FRACTION)
 from repro.core import calibrate
-from repro.core.compiled import O3Knobs, compile_program, schedule_arrays, \
+from repro.core.compiled import compile_program, schedule_arrays, \
     schedule_batch
 from repro.core.cost import cost_program
 from repro.core.hwspec import A64FX_CORE, HardwareSpec
@@ -37,14 +37,6 @@ from repro.core.simulate import simulate
 
 OUT = Path("experiments/bench")
 BENCH_JSON = Path("BENCH_kernel_suite.json")
-
-
-def _default_grid(hw: HardwareSpec) -> O3Knobs:
-    return O3Knobs.from_grid(hw, [(w, mw, vw, qd)
-                                  for w in calibrate.O3_WINDOWS
-                                  for mw in calibrate.O3_MEM_WIDTHS
-                                  for vw in calibrate.O3_VPU_WIDTHS
-                                  for qd in calibrate.O3_QUEUE_DEPTHS])
 
 
 def scheduler_throughput(table: calibrate.AccuracyTable,
@@ -63,7 +55,7 @@ def scheduler_throughput(table: calibrate.AccuracyTable,
     per-op interpreter the differential tests pin both against."""
     compiled = [compile_program(p, hw, compute_dtype="f64")
                 for p in table.programs]
-    knobs = _default_grid(hw)
+    knobs = calibrate.default_o3_knobs(hw)
 
     def timed(fn, per_round: int) -> dict:
         n_ops = rounds = 0
@@ -248,7 +240,9 @@ def main(argv=None) -> int:
                   "simulated_us": r.simulated_us,
                   "diff_pct": r.diff_pct,
                   "simulated_sched_us": r.simulated_sched_us,
-                  "sched_diff_pct": r.sched_diff_pct} for r in table.rows],
+                  "sched_diff_pct": r.sched_diff_pct,
+                  "bound_by": r.bound_by,
+                  "fit_input": r.fit_input} for r in table.rows],
         "o3_sweep": sweep.results if sweep is not None else None,
         "o3_sweep_timing": sweep_timing,
         "summary": {

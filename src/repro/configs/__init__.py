@@ -6,8 +6,11 @@ from .shapes import (
     PREFILL_32K,
     SHAPES,
     TRAIN_4K,
+    ZOO_PHASES,
+    ZOO_SHAPES,
     shapes_for,
     skipped_shapes_for,
+    zoo_phases_for,
 )
 
 __all__ = [
@@ -24,6 +27,9 @@ __all__ = [
     "PREFILL_32K",
     "DECODE_32K",
     "LONG_500K",
+    "ZOO_PHASES",
+    "ZOO_SHAPES",
     "shapes_for",
     "skipped_shapes_for",
+    "zoo_phases_for",
 ]

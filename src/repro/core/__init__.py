@@ -1,3 +1,8 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The simulator core (DESIGN.md §§2-16).
+
+HLO parsing (``hlo``), the unified cost pipeline (``cost``, ``memory``),
+the three engines (``engine`` occupancy, ``schedule``/``compiled`` O3,
+``node`` multi-core), hardware parameter files (``hwspec``), calibration
+(``calibrate``), the model-zoo pipeline (``zoo``), and reporting
+(``roofline``, ``pa``, ``simulate``).
+"""

@@ -195,6 +195,7 @@ def fit_cpu_host(n_mem: int = 1 << 21, n_fac: int = 1 << 15) -> HardwareSpec:
 
 @dataclass
 class KernelRow:
+    """One Table-1 kernel: measured wall time vs simulated estimates."""
     name: str
     ktype: str
     n: int
@@ -202,6 +203,7 @@ class KernelRow:
     simulated_us: float          # flat occupancy engine
     fit_input: bool = False      # this kernel informed the parameter fit
     simulated_sched_us: float = 0.0   # dependency-aware schedule engine
+    bound_by: str = ""           # binding port of the occupancy engine
 
     @property
     def diff_pct(self) -> float:
@@ -216,6 +218,7 @@ class KernelRow:
 
 @dataclass
 class AccuracyTable:
+    """Fig. 3-style accuracy summary over the kernel suite (paper §5)."""
     rows: List[KernelRow]
     # parsed per-kernel programs, aligned with rows (kept when
     # keep_programs=True so sweep_o3 can re-schedule without re-measuring)
@@ -296,7 +299,8 @@ def kernel_accuracy_table(hw: Optional[HardwareSpec] = None,
             rows.append(KernelRow(k.name, k.ktype, n, t * 1e6,
                                   rep.engine.t_est * 1e6,
                                   fit_input=k.name in _FACTOR_FIT,
-                                  simulated_sched_us=rep.schedule.t_est * 1e6))
+                                  simulated_sched_us=rep.schedule.t_est * 1e6,
+                                  bound_by=rep.engine.bound_by))
             if keep_programs:
                 programs.append(rep.program)
     return AccuracyTable(rows, programs=programs)
@@ -313,6 +317,25 @@ O3_WINDOWS = (4, 16, 64, 256, 1024)
 O3_MEM_WIDTHS = (1, 2, 4)
 O3_VPU_WIDTHS = (1, 2)
 O3_QUEUE_DEPTHS = (4, 16, 64)
+
+
+def default_o3_knobs(hw: HardwareSpec, windows=O3_WINDOWS,
+                     mem_widths=O3_MEM_WIDTHS, vpu_widths=O3_VPU_WIDTHS,
+                     queue_depths=O3_QUEUE_DEPTHS):
+    """The default batched O3 knob grid as a packed :class:`~.compiled.O3Knobs`.
+
+    One place builds the (window x mem-width x vpu-width x queue-depth)
+    product for every consumer of ``schedule_batch`` — ``sweep_o3``, the
+    kernel-suite throughput benchmark, and the model-zoo pipeline
+    (``core.zoo``, DESIGN.md §15), which passes compact subsets to stay
+    inside its wall-clock budget.
+    """
+    from .compiled import O3Knobs
+    return O3Knobs.from_grid(hw, [(w, mw, vw, qd)
+                                  for w in windows
+                                  for mw in mem_widths
+                                  for vw in vpu_widths
+                                  for qd in queue_depths])
 
 
 def _knob_spec(hw: HardwareSpec, w: int, mw: int, vw: int,
@@ -346,7 +369,12 @@ def sweep_o3(table: AccuracyTable, hw: HardwareSpec,
     extra counts chart the knob grid's scaling behaviour (and ``best``
     is picked among the smallest swept core count).
 
-    Requires a table built with ``keep_programs=True``."""
+    Requires a table built with ``keep_programs=True``.  Returns an
+    :class:`O3Sweep` (ranked results + the tuned ``HardwareSpec``).
+    See DESIGN.md §13 (the batched array kernel), §14 (the shard-mode
+    contention costing behind ``core_counts``) and §11 (what the knobs
+    mean); ``core.zoo.estimate_program`` is the same machinery pointed
+    at whole-application programs (DESIGN.md §15)."""
     from .compiled import O3Knobs, compile_program, schedule_batch
     from .node import shard_costed
     if not table.programs:
@@ -392,6 +420,7 @@ def sweep_o3(table: AccuracyTable, hw: HardwareSpec,
 
 @dataclass
 class O3Sweep:
+    """Ranked results of one batched O3 knob sweep (paper §4 tuning)."""
     results: List[Dict]          # ranked best-first
     best: HardwareSpec           # hw with the winning O3 knobs applied
 

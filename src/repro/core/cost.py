@@ -28,6 +28,9 @@ from .memory import MemTraffic, route_program, route_standalone
 
 @dataclass
 class OpTime:
+    """Per-op cost decomposition: compute/memory/ICI times + routed traffic
+    (the unified cost pipeline's unit, shared by all engines; DESIGN.md §3).
+    """
     op: OpStat
     t_compute: float
     t_mem: float

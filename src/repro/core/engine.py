@@ -32,6 +32,9 @@ from .memory import aggregate_traffic
 
 @dataclass
 class EngineResult:
+    """Occupancy-engine output: per-port busy sums composed with the
+    configured overlap fractions (DESIGN.md §6).
+    """
     port_busy: Dict[str, float]
     t_est: float
     t_roofline: float

@@ -75,6 +75,7 @@ FREE = {
 
 @dataclass
 class Instr:
+    """One parsed HLO instruction (pre-aggregation; see OpStat)."""
     name: str
     dtype: str
     shape: Tuple[int, ...]
@@ -88,6 +89,7 @@ class Instr:
 
 @dataclass
 class Computation:
+    """One HLO computation: params + instructions, fusion bodies included."""
     name: str
     params: Dict[str, Tuple[str, Tuple[int, ...]]]
     instrs: Dict[str, Instr]
@@ -135,6 +137,11 @@ class OpStat:
 
 @dataclass
 class Program:
+    """The parsed program: entry-computation op stats, fusion-inlined.
+
+    This is every engine's input artifact; compiled/node/costed forms
+    are memoized on it (DESIGN.md §2-§3).
+    """
     ops: List[OpStat]
     entry: str
     n_partitions: int

@@ -88,6 +88,11 @@ class NodeTopology:
 
 @dataclass(frozen=True)
 class HardwareSpec:
+    """One hardware parameter file (the gem5-parameter analogue,
+    DESIGN.md §4): compute ports, memory hierarchy, interconnect,
+    overlap model and O3 scheduling resources, per modeled unit
+    (chip for TPU specs, core for A64FX_CORE/CPU_HOST).
+    """
     name: str
     # ---- compute ports (paper: reservation stations / execution units)
     peak_flops: Dict[str, float]        # dtype -> FLOP/s on the matrix unit

@@ -352,6 +352,7 @@ def _dataflow(durs, ports, indptr, indices, core_of, cmg_of_core, ring_lat):
 # ------------------------------------------------------------------ results
 @dataclass
 class CoreStat:
+    """Per-core schedule stats of one node run."""
     core: int
     cmg: int
     t_finish: float              # last finish on this core
@@ -361,6 +362,9 @@ class CoreStat:
 
 @dataclass
 class CmgStat:
+    """Per-CMG contention report: active-core estimates + effective
+    bandwidths at each shared level (DESIGN.md §14).
+    """
     cmg: int
     n_cores: int                 # cores of this CMG used by the run
     n_active: Dict[str, float]   # level -> concurrently-active estimate
@@ -371,7 +375,20 @@ class CmgStat:
 
 @dataclass
 class NodeResult:
-    """Per-core timelines + node-level schedule + contention report."""
+    """Per-core timelines + node-level schedule + contention report
+    (the multi-core node engine's output, DESIGN.md §14).
+
+    ``t_est`` is the contention-aware node makespan;
+    ``t_zero_contention`` the fixpoint's uncontended first pass, so every
+    estimate ships inside the sandwich ``t_zero_contention <= t_est <=
+    t_single_core`` (pinned by ``tests/test_node_engine.py``).
+    ``schedule`` aggregates the per-core streams into a
+    :class:`~.schedule.ScheduleResult`; ``per_cmg`` carries each CMG's
+    concurrently-active estimates and effective shared-level bandwidths.
+    Produced by ``schedule_node``/``simulate_node`` and surfaced as
+    ``SimReport.node`` under ``simulate(engine="node")``; the model-zoo
+    pipeline (DESIGN.md §15) sweeps it across a core-count axis.
+    """
     t_est: float
     n_cores: int
     partition: str

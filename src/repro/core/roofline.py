@@ -21,6 +21,9 @@ from .hwspec import HardwareSpec
 
 @dataclass
 class Roofline:
+    """Three-term roofline (compute / memory / collective) for one program
+    on one spec (DESIGN.md §6); `as_dict` feeds reports and artifacts.
+    """
     compute_s: float
     memory_s: float
     collective_s: float

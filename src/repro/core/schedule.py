@@ -79,6 +79,15 @@ class ScheduledOp:
 
 @dataclass
 class ScheduleResult:
+    """Output of the dependency-aware O3 list scheduler (DESIGN.md §11).
+
+    ``t_est`` always sits inside the sandwich ``max(t_roofline,
+    t_dataflow) <= t_est <= t_serial`` (property-tested).  Timeline and
+    critical-path detail are materialized lazily on first access when the
+    result came from the compiled fast path (DESIGN.md §13); sweeps that
+    only read ``t_est`` never pay for them.  The node engine
+    (DESIGN.md §14) aggregates its per-core streams into one of these.
+    """
     t_est: float                 # makespan of the schedule
     t_roofline: float            # max port busy / issue width (lower bound)
     t_serial: float              # fully serialized (upper bound)

@@ -27,6 +27,10 @@ from .schedule import ScheduleResult, schedule_program
 
 @dataclass
 class SimReport:
+    """Everything ``simulate()`` produced for one compiled program:
+    roofline terms (DESIGN.md §6), the engine result(s), program summary,
+    the rendered PA report, and the parsed ``program`` for re-costing.
+    """
     hw: str
     n_chips: int
     roofline: Roofline
@@ -151,7 +155,13 @@ def simulate(compiled, hw: HardwareSpec = TPU_V5E, n_chips: int = 1,
              n_cores: int = 1,
              topology: Optional[NodeTopology] = None,
              node_partition: str = "round-robin") -> SimReport:
-    """``compiled`` is a jax Compiled object, or raw HLO text.
+    """Simulate one compiled program on ``hw``: the paper's end-to-end flow
+    (application binary -> execution-time estimate + PA data, DESIGN.md §2).
+
+    ``compiled`` is a jax ``Compiled`` object, or raw HLO text.  The
+    program is parsed once (DESIGN.md §9 byte-accounting rules) and costed
+    once through the unified cost pipeline and memory hierarchy
+    (DESIGN.md §3/§12); every engine shares that costed list.
 
     ``engine`` selects the overlap model:
       * ``"occupancy"`` (default) — the flat multi-port sum with assumed
@@ -167,6 +177,12 @@ def simulate(compiled, hw: HardwareSpec = TPU_V5E, n_chips: int = 1,
         ``node_partition`` ("round-robin" | "graph" | "shard");
         ``report.t_est`` is the contention-aware node makespan and the PA
         report gains the per-CMG contention section.
+
+    Returns a :class:`SimReport`; ``report.pa`` is the human-readable PA
+    report, ``report.to_json()`` the machine-readable artifact.  For
+    sweeping many configurations prefer the batched paths
+    (``calibrate.sweep_o3``, ``core.zoo`` — DESIGN.md §13/§15) over
+    repeated ``simulate`` calls: they share parse/cost/compile work.
     """
     if engine not in ("occupancy", "schedule", "both", "node"):
         raise ValueError(f"unknown engine mode {engine!r}")

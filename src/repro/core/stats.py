@@ -16,6 +16,8 @@ from typing import Dict, Iterator
 
 
 class Stats:
+    """Sectioned counter sink for PA-style accounting (DESIGN.md §2)."""
+
     def __init__(self) -> None:
         self._sections: Dict[str, Dict[str, float]] = defaultdict(
             lambda: defaultdict(float))

@@ -1,0 +1,474 @@
+"""Model-zoo estimation pipeline: every registry config through the node engine.
+
+The paper's end goal is estimating execution cycles of *one-node
+applications* — not isolated kernels — with accuracy good enough for
+relative evaluation and tuning.  This module is that step (DESIGN.md §15):
+it drives the whole ``configs.registry`` model zoo through the existing
+kernels/HLO path and the multi-core node engine, one pipeline:
+
+1. **Trace** — each architecture's representative phases (one train step,
+   one prefill, one decode step; ``configs.shapes.ZOO_SHAPES``) are lowered
+   and compiled through the real model/kernel stack at structure-preserving
+   reduced width (``reduced_config``), and the compiled HLO is parsed into
+   a costed :class:`~.hlo.Program`.  Traces are memoized in-process (the
+   built model and abstract params are shared across a config's phases)
+   and optionally on disk, so tests and sweeps never recompile.
+2. **Estimate** — each program is sharded over the
+   :class:`~.hwspec.NodeTopology` and scheduled by the contention-aware
+   node engine (``core.node``, DESIGN.md §14) across a core-count axis,
+   and the batched O3 knob grid (``core.compiled.schedule_batch`` over
+   ``calibrate.default_o3_knobs``) rides the same compiled forms — per
+   model, per phase, per core count: cycle estimates, the zero-contention
+   bound, bound-by classification and roofline terms.
+3. **Rank** — per phase, models are ranked by estimated time at every core
+   count, and Kendall-tau rank correlations across the core-count axis
+   (plus against active parameter count) quantify rank *stability* — the
+   paper's relative-evaluation claim, gem5-style (per-workload error/rank
+   reporting over a benchmark suite).
+
+``benchmarks/model_zoo.py`` is the CLI: it emits ``BENCH_model_zoo.json``
+(schema: DESIGN.md §16) under a CI-enforceable wall-clock budget, and
+``tests/test_zoo.py`` pins the round-trip and the rank-stability floor.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..configs import ARCHS, ZOO_SHAPES, reduced_config, zoo_phases_for
+from ..configs.base import ModelConfig, ShapeConfig
+from .hlo import Program, parse_program
+from .hwspec import A64FX_CORE, HardwareSpec, NodeTopology
+from .node import compile_node, schedule_node, shard_costed
+from .roofline import roofline_from_program
+
+#: Core counts the default sweep estimates at: one core, one full CMG,
+#: the whole 4-CMG node (mirrors the kernel suite's node section).
+DEFAULT_CORE_COUNTS: Tuple[int, ...] = (1, 12, 48)
+
+#: A64FX clock — node times convert to the paper's execution-cycle unit.
+DEFAULT_CLOCK_HZ = 1.8e9
+
+# compact O3 knob subsets for the zoo's batched grid (12 combos; the full
+# calibrate grid is 90 — overkill per (model, phase, core count) cell)
+ZOO_O3_WINDOWS = (16, 64, 256)
+ZOO_O3_MEM_WIDTHS = (1, 2)
+ZOO_O3_VPU_WIDTHS = (1, 2)
+ZOO_O3_QUEUE_DEPTHS = (16,)
+
+# ----------------------------------------------------------------- tracing
+# (arch, param_dtype) -> (model, abstract params); shared across phases so
+# one build serves train + prefill + decode
+_MODEL_CACHE: Dict[tuple, tuple] = {}
+# (arch, phase, seq_len, global_batch, param_dtype) -> Program
+_PROGRAM_CACHE: Dict[tuple, Program] = {}
+
+
+def clear_trace_caches() -> None:
+    """Drop the in-process model/program memos (tests use this)."""
+    _MODEL_CACHE.clear()
+    _PROGRAM_CACHE.clear()
+
+
+def zoo_config(arch: str) -> ModelConfig:
+    """The config the zoo traces for ``arch``: the structure-preserving
+    reduced form (same family/MoE/SSM/GQA/enc-dec features, toy width).
+
+    Full-size sharded cells remain ``launch.dryrun``'s job; the zoo's
+    question is *relative* cross-architecture behaviour on the node model,
+    which the reduced forms preserve at a compile cost of seconds.
+    """
+    return reduced_config(ARCHS[arch])
+
+
+def phase_model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS for the roofline: 6·N_active·D (train), 2·N_active·D
+    (prefill), 2·N_active·B (decode: one token per sequence)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch
+
+
+def _traced_model(arch: str, param_dtype: str):
+    import jax.numpy as jnp
+
+    from ..models import params as pr
+    from ..models.lm import build_model
+    key = (arch, param_dtype)
+    hit = _MODEL_CACHE.get(key)
+    if hit is not None:
+        return hit
+    cfg = zoo_config(arch)
+    model = build_model(cfg)
+    p_abs = pr.abstract(model.param_specs(), jnp.dtype(param_dtype))
+    _MODEL_CACHE[key] = (cfg, model, p_abs)
+    return _MODEL_CACHE[key]
+
+
+def _phase_hlo(arch: str, phase: str, shape: ShapeConfig,
+               param_dtype: str) -> str:
+    """Lower + compile one (arch, phase) cell on the host device and
+    return the compiled HLO text (the simulator's input artifact)."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..models import params as pr
+    from ..serve.engine import make_decode_step, make_prefill_step
+    from ..serve.kvcache import cache_abstract
+    from ..train.trainer import make_train_step
+    from ..configs.base import RunConfig
+
+    cfg, model, p_abs = _traced_model(arch, param_dtype)
+    pdt = jnp.dtype(param_dtype)
+    b_abs = model.input_specs(shape, pdt)
+    if phase == "train":
+        run = RunConfig(model=cfg, shape=shape, param_dtype=param_dtype,
+                        compute_dtype=param_dtype)
+        step, _, opt_specs, *_ = make_train_step(model, run, rules=None)
+        o_abs = pr.abstract(opt_specs, jnp.dtype(run.optimizer_dtype))
+        lowered = jax.jit(step).lower(p_abs, o_abs, b_abs)
+    elif phase == "prefill":
+        step = make_prefill_step(model, rules=None)
+        lowered = jax.jit(step).lower(p_abs, b_abs)
+    elif phase == "decode":
+        step = make_decode_step(model, rules=None)
+        c_abs = cache_abstract(model, shape.global_batch, shape.seq_len, pdt)
+        lowered = jax.jit(step).lower(p_abs, c_abs, b_abs)
+    else:
+        raise ValueError(f"unknown zoo phase {phase!r}")
+    return lowered.compile().as_text()
+
+
+def trace_phase(arch: str, phase: str,
+                shape: Optional[ShapeConfig] = None,
+                param_dtype: str = "float32",
+                hlo_cache_dir: Optional[Path] = None) -> Program:
+    """Trace one (architecture, phase) cell into a parsed ``Program``.
+
+    Memoized in-process on (arch, phase, shape, dtype); ``hlo_cache_dir``
+    additionally persists the compiled HLO text across processes (the
+    model-zoo benchmark's warm path — parsing is milliseconds, the jax
+    compile is the seconds that would blow the wall-clock budget).
+    """
+    if phase not in ZOO_SHAPES and shape is None:
+        raise ValueError(f"unknown zoo phase {phase!r}; "
+                         f"known: {sorted(ZOO_SHAPES)}")
+    shape = shape or ZOO_SHAPES[phase]
+    key = (arch, phase, shape.seq_len, shape.global_batch, param_dtype)
+    prog = _PROGRAM_CACHE.get(key)
+    if prog is not None:
+        return prog
+    text = None
+    cache_file = None
+    if hlo_cache_dir is not None:
+        cache_file = Path(hlo_cache_dir) / (
+            f"{arch}__{phase}_s{shape.seq_len}b{shape.global_batch}"
+            f"_{param_dtype}.hlo.txt")
+        if cache_file.exists():
+            text = cache_file.read_text()
+    if text is None:
+        text = _phase_hlo(arch, phase, shape, param_dtype)
+        if cache_file is not None:
+            cache_file.parent.mkdir(parents=True, exist_ok=True)
+            cache_file.write_text(text)
+    prog = parse_program(text)
+    _PROGRAM_CACHE[key] = prog
+    return prog
+
+
+# ------------------------------------------------------------- rank utility
+def kendall_tau(xs: Sequence[float], ys: Sequence[float]) -> float:
+    """Kendall tau-b (tie-corrected) rank correlation; O(n²), n is tiny.
+
+    Shared by the zoo's rank-stability tables and the accuracy-regression
+    tests — no scipy dependency.
+    """
+    n = len(xs)
+    conc = disc = tie_x = tie_y = 0
+    for i in range(n):
+        for j in range(i + 1, n):
+            dx = xs[i] - xs[j]
+            dy = ys[i] - ys[j]
+            if dx == 0 and dy == 0:
+                tie_x += 1
+                tie_y += 1
+            elif dx == 0:
+                tie_x += 1
+            elif dy == 0:
+                tie_y += 1
+            elif (dx > 0) == (dy > 0):
+                conc += 1
+            else:
+                disc += 1
+    n0 = n * (n - 1) / 2
+    denom = ((n0 - tie_x) * (n0 - tie_y)) ** 0.5
+    return (conc - disc) / denom if denom > 0 else 0.0
+
+
+# ------------------------------------------------------------------ results
+@dataclass
+class CoreCountEstimate:
+    """Node-engine estimate of one (model, phase) program at one core count."""
+    n_cores: int
+    t_est_s: float                   # contention-aware node makespan
+    t_zero_contention_s: float       # fixpoint iteration 0 (lower bound)
+    parallel_efficiency: float       # busy / (cores x makespan)
+    bound_by: str                    # binding port of the node schedule
+    shared_n_active: Dict[str, float] = field(default_factory=dict)
+    # batched O3 knob grid riding the same compiled form (0.0 = grid off)
+    t_best_knobs_s: float = 0.0
+    best_knobs: Optional[Dict[str, int]] = None
+
+    def cycles(self, clock_hz: float = DEFAULT_CLOCK_HZ) -> float:
+        """Execution cycles at ``clock_hz`` — the paper's headline unit."""
+        return self.t_est_s * clock_hz
+
+
+@dataclass
+class PhaseEstimate:
+    """One (model, phase) row: program summary + per-core-count estimates."""
+    arch: str
+    phase: str
+    n_ops: int                       # parsed HLO ops
+    n_costed: int                    # ops the cost model charges
+    flops: float
+    bytes_accessed: float
+    roofline_dominant: str           # compute | memory | collective
+    roofline_fraction: float
+    per_core: List[CoreCountEstimate] = field(default_factory=list)
+
+    def at(self, n_cores: int) -> CoreCountEstimate:
+        """The estimate at one swept core count (KeyError if not swept)."""
+        for ce in self.per_core:
+            if ce.n_cores == n_cores:
+                return ce
+        raise KeyError(f"core count {n_cores} not swept for "
+                       f"{self.arch}/{self.phase}")
+
+    @property
+    def node_speedup(self) -> float:
+        """t_est at the smallest swept core count / at the largest."""
+        if not self.per_core:
+            return 1.0
+        lo = min(self.per_core, key=lambda c: c.n_cores)
+        hi = max(self.per_core, key=lambda c: c.n_cores)
+        return lo.t_est_s / max(hi.t_est_s, 1e-30)
+
+
+@dataclass
+class ZooReport:
+    """The full zoo sweep: estimates + rank tables + stability taus."""
+    hw: str
+    topology: str
+    partition: str
+    compute_dtype: str
+    clock_hz: float
+    core_counts: Tuple[int, ...]
+    phases: Tuple[str, ...]
+    # arch -> phase -> PhaseEstimate
+    estimates: Dict[str, Dict[str, PhaseEstimate]] = field(
+        default_factory=dict)
+    wall_s: float = 0.0
+
+    def rank_table(self, phase: str, n_cores: int) -> List[str]:
+        """Archs ranked fastest-first by node ``t_est`` for one phase at
+        one core count (archs missing the phase are omitted)."""
+        rows = [(est[phase].at(n_cores).t_est_s, arch)
+                for arch, est in self.estimates.items() if phase in est]
+        return [arch for _, arch in sorted(rows)]
+
+    def rank_stability(self, phase: str) -> Dict[str, float]:
+        """Kendall taus for one phase: between every adjacent pair of the
+        core-count axis (``"1->12"`` style keys), their ``min``, and
+        ``vs_flops`` (estimate order vs traced-work order — the sanity
+        rank: more compiled FLOPs should mean a slower estimate)."""
+        archs = [a for a, est in self.estimates.items() if phase in est]
+        t = {k: [self.estimates[a][phase].at(k).t_est_s for a in archs]
+             for k in self.core_counts}
+        out: Dict[str, float] = {}
+        pair_taus = []
+        for lo, hi in zip(self.core_counts, self.core_counts[1:]):
+            tau = kendall_tau(t[lo], t[hi])
+            out[f"{lo}->{hi}"] = tau
+            pair_taus.append(tau)
+        out["min"] = min(pair_taus) if pair_taus else 1.0
+        work = [self.estimates[a][phase].flops for a in archs]
+        out["vs_flops"] = kendall_tau(work, t[min(self.core_counts)])
+        return out
+
+    def to_dict(self) -> dict:
+        """The ``BENCH_model_zoo.json`` payload (schema: DESIGN.md §16)."""
+        models: Dict[str, dict] = {}
+        for arch, by_phase in self.estimates.items():
+            cfg = zoo_config(arch) if arch in ARCHS else None
+            phases = {}
+            for phase, pe in by_phase.items():
+                phases[phase] = {
+                    "n_ops": pe.n_ops,
+                    "n_costed": pe.n_costed,
+                    "flops": pe.flops,
+                    "bytes_accessed": pe.bytes_accessed,
+                    "roofline_dominant": pe.roofline_dominant,
+                    "roofline_fraction": pe.roofline_fraction,
+                    "node_speedup": pe.node_speedup,
+                    "per_core": {
+                        str(ce.n_cores): {
+                            "t_est_us": ce.t_est_s * 1e6,
+                            "cycles": ce.cycles(self.clock_hz),
+                            "t_zero_contention_us":
+                                ce.t_zero_contention_s * 1e6,
+                            "parallel_efficiency": ce.parallel_efficiency,
+                            "bound_by": ce.bound_by,
+                            "shared_n_active": ce.shared_n_active,
+                            "t_best_knobs_us": ce.t_best_knobs_s * 1e6,
+                            "best_knobs": ce.best_knobs,
+                        } for ce in pe.per_core},
+                }
+            models[arch] = {
+                "family": cfg.family if cfg else "",
+                "param_count": cfg.param_count() if cfg else 0,
+                "active_param_count": (ARCHS[arch].active_param_count()
+                                       if arch in ARCHS else 0),
+                "phases": phases,
+            }
+        rank = {ph: {str(k): self.rank_table(ph, k)
+                     for k in self.core_counts}
+                for ph in self.phases}
+        taus = {ph: self.rank_stability(ph) for ph in self.phases}
+        return {
+            "schema": 1,
+            "hw": self.hw,
+            "topology": self.topology,
+            "partition": self.partition,
+            "compute_dtype": self.compute_dtype,
+            "clock_ghz": self.clock_hz / 1e9,
+            "core_counts": list(self.core_counts),
+            "phases": list(self.phases),
+            "models": models,
+            "rank": rank,
+            "kendall_tau": taus,
+            "wall_s": self.wall_s,
+        }
+
+
+# ------------------------------------------------------------- the pipeline
+def estimate_program(prog: Program, hw: HardwareSpec = A64FX_CORE,
+                     core_counts: Sequence[int] = DEFAULT_CORE_COUNTS,
+                     topology: Optional[NodeTopology] = None,
+                     partition: str = "shard",
+                     compute_dtype: str = "f32",
+                     model_flops: float = 0.0,
+                     o3_knobs=None,
+                     arch: str = "", phase: str = "") -> PhaseEstimate:
+    """Estimate one traced program across the core-count axis.
+
+    The program is costed once (``compile_node`` memoizes the node form on
+    the ``Program``); only the node schedule reruns per core count.  When
+    ``o3_knobs`` (an :class:`~.compiled.O3Knobs` batch) is given, the
+    batched scheduler (``schedule_batch``) additionally sweeps the knob
+    grid over the shard-contended compiled form at every core count and
+    records the best combo — the ``calibrate.sweep_o3`` machinery pointed
+    at applications instead of microkernels.
+    """
+    from .compiled import compile_program, schedule_batch
+
+    topo = topology or hw.topology or NodeTopology.degenerate(
+        max(core_counts))
+    nc = compile_node(prog, hw, compute_dtype=compute_dtype)
+    rf = roofline_from_program(prog, hw, 1, model_flops, compute_dtype)
+    pe = PhaseEstimate(
+        arch=arch, phase=phase, n_ops=len(prog.ops),
+        n_costed=int(nc.costed_mask.sum()),
+        flops=prog.flops, bytes_accessed=prog.bytes_accessed,
+        roofline_dominant=rf.dominant,
+        roofline_fraction=rf.roofline_fraction)
+    for k in core_counts:
+        nr = schedule_node(nc, hw, k, topology=topo, partition=partition)
+        ce = CoreCountEstimate(
+            n_cores=k, t_est_s=nr.t_est,
+            t_zero_contention_s=nr.t_zero_contention,
+            parallel_efficiency=nr.parallel_efficiency,
+            bound_by=nr.schedule.bound_by,
+            shared_n_active=dict(nr.per_cmg[0].n_active))
+        if o3_knobs is not None:
+            if k == 1:
+                cp = compile_program(prog, hw, compute_dtype=compute_dtype)
+            else:
+                costed = shard_costed(prog, hw, k, topo,
+                                      compute_dtype=compute_dtype)
+                cp = compile_program(prog, hw, compute_dtype=compute_dtype,
+                                     costed=costed)
+            ts = schedule_batch(cp, o3_knobs)
+            best = int(ts.argmin())
+            ce.t_best_knobs_s = float(ts[best])
+            ce.best_knobs = {
+                "inflight_window": int(o3_knobs.window[best]),
+                "mem_issue_width": int(o3_knobs.width[best, 2]),
+                "vpu_issue_width": int(o3_knobs.width[best, 1]),
+                "queue_depth": int(o3_knobs.depth[best, 2]),
+            }
+        pe.per_core.append(ce)
+    return pe
+
+
+def zoo_o3_knobs(hw: HardwareSpec):
+    """The zoo's compact batched knob grid (12 combos around ``hw``)."""
+    from .calibrate import default_o3_knobs
+    return default_o3_knobs(hw, windows=ZOO_O3_WINDOWS,
+                            mem_widths=ZOO_O3_MEM_WIDTHS,
+                            vpu_widths=ZOO_O3_VPU_WIDTHS,
+                            queue_depths=ZOO_O3_QUEUE_DEPTHS)
+
+
+def run_zoo(models: Optional[Sequence[str]] = None,
+            phases: Optional[Sequence[str]] = None,
+            hw: HardwareSpec = A64FX_CORE,
+            core_counts: Sequence[int] = DEFAULT_CORE_COUNTS,
+            topology: Optional[NodeTopology] = None,
+            partition: str = "shard",
+            compute_dtype: str = "f32",
+            param_dtype: str = "float32",
+            clock_hz: float = DEFAULT_CLOCK_HZ,
+            with_o3_grid: bool = True,
+            hlo_cache_dir: Optional[Path] = None,
+            progress=None) -> ZooReport:
+    """Trace + estimate + rank the model zoo end to end.
+
+    ``models`` defaults to every config in ``configs.registry.ARCHS``;
+    ``phases`` defaults to each model's ``zoo_phases_for`` set.  Returns a
+    :class:`ZooReport`; ``benchmarks/model_zoo.py`` wraps this with a
+    wall-clock budget and writes ``BENCH_model_zoo.json``.
+    """
+    t0 = time.perf_counter()
+    names = list(models) if models is not None else sorted(ARCHS)
+    topo = topology or hw.topology
+    knobs = zoo_o3_knobs(hw) if with_o3_grid else None
+    report = ZooReport(
+        hw=hw.name, topology=(topo.name if topo else "degenerate"),
+        partition=partition, compute_dtype=compute_dtype,
+        clock_hz=clock_hz, core_counts=tuple(core_counts),
+        phases=tuple(phases) if phases is not None
+        else tuple(ZOO_SHAPES))
+    for arch in names:
+        cfg = zoo_config(arch)
+        arch_phases = (tuple(phases) if phases is not None
+                       else zoo_phases_for(cfg))
+        report.estimates[arch] = {}
+        for phase in arch_phases:
+            tp0 = time.perf_counter()
+            prog = trace_phase(arch, phase, param_dtype=param_dtype,
+                               hlo_cache_dir=hlo_cache_dir)
+            pe = estimate_program(
+                prog, hw, core_counts, topo, partition, compute_dtype,
+                model_flops=phase_model_flops(cfg, ZOO_SHAPES[phase]),
+                o3_knobs=knobs, arch=arch, phase=phase)
+            report.estimates[arch][phase] = pe
+            if progress is not None:
+                progress(arch, phase, pe, time.perf_counter() - tp0)
+    report.wall_s = time.perf_counter() - t0
+    return report

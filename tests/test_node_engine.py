@@ -325,28 +325,9 @@ def test_node_acceptance_on_compiled_kernel_suite():
 
 
 # ------------------------------------------------------- accuracy (Kendall)
-def kendall_tau_b(xs, ys):
-    """Tau-b (tie-corrected) — tiny n, O(n^2) is fine; no scipy dep."""
-    n = len(xs)
-    conc = disc = tie_x = tie_y = 0
-    for i in range(n):
-        for j in range(i + 1, n):
-            dx = xs[i] - xs[j]
-            dy = ys[i] - ys[j]
-            if dx == 0 and dy == 0:
-                tie_x += 1
-                tie_y += 1
-            elif dx == 0:
-                tie_x += 1
-            elif dy == 0:
-                tie_y += 1
-            elif (dx > 0) == (dy > 0):
-                conc += 1
-            else:
-                disc += 1
-    n0 = n * (n - 1) // 2
-    denom = ((n0 - tie_x) * (n0 - tie_y)) ** 0.5
-    return (conc - disc) / denom if denom > 0 else 0.0
+# one tau-b implementation serves the whole repo (self-checked in
+# tests/test_zoo.py alongside the model-zoo rank-stability floor)
+from repro.core.zoo import kendall_tau as kendall_tau_b  # noqa: E402
 
 
 def test_kendall_tau_rank_floor_on_bench_artifact():
@@ -367,10 +348,6 @@ def test_kendall_tau_rank_floor_on_bench_artifact():
         f"model no longer ranks kernels like the measurements do")
 
 
-def test_kendall_tau_b_self_checks():
-    assert kendall_tau_b([1, 2, 3, 4], [10, 20, 30, 40]) == 1.0
-    assert kendall_tau_b([1, 2, 3, 4], [40, 30, 20, 10]) == -1.0
-    assert abs(kendall_tau_b([1, 2, 3, 4], [10, 20, 40, 30])) < 1.0
 
 
 # ------------------------------------------- per-OpClass VPU non-degeneracy

@@ -1,0 +1,69 @@
+"""Markdown link check: every relative link in the repo's *.md resolves.
+
+    python tools/md_linkcheck.py [files...]
+
+Defaults to every tracked-looking .md at the repo root.  Checks
+``[text](target)`` links: relative targets must exist on disk (anchors
+are stripped); absolute http(s)/mailto targets are not fetched (CI has
+no network guarantee) — only their syntax is accepted.  Exits 1 with a
+list of broken links.  Runs in CI (.github/workflows/ci.yml).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_SCHEMES = ("http://", "https://", "mailto:")
+
+
+def check_file(path: Path) -> list[str]:
+    """Return broken-link messages for one markdown file."""
+    errors = []
+    text = path.read_text()
+    in_code = False
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(SKIP_SCHEMES) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (path.parent / rel).resolve()
+            if not resolved.exists():
+                try:
+                    shown = path.relative_to(ROOT)
+                except ValueError:
+                    shown = path
+                errors.append(f"{shown}:{lineno}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    """Check the given files (default: all root-level .md) and report."""
+    files = ([Path(a).resolve() for a in argv]
+             or sorted(ROOT.glob("*.md")) + sorted(ROOT.glob("tools/*.md")))
+    errors = []
+    for f in files:
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e, file=sys.stderr)
+    n_files = len(files)
+    if errors:
+        print(f"md_linkcheck: {len(errors)} broken link(s) in {n_files} "
+              f"file(s)", file=sys.stderr)
+        return 1
+    print(f"md_linkcheck: {n_files} file(s) OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
