@@ -362,21 +362,23 @@ def sweep_o3(table: AccuracyTable, hw: HardwareSpec,
     runs the same pass as a jit-ed ``lax.scan`` on the accelerator.
 
     ``core_counts`` adds the node engine's core count as a sweep axis:
-    for each count > 1 the program is re-costed through the shard-mode
-    contention model (``core.node.shard_costed``) and the same batched
-    knob grid runs against the contended compiled form.  Rows against
-    single-core measurements are only comparable at ``n_cores=1``; the
-    extra counts chart the knob grid's scaling behaviour (and ``best``
-    is picked among the smallest swept core count).
+    each count > 1 runs the batched node engine
+    (``core.node.schedule_node_batch``, shard partition), which carries
+    every knob combo through its own contention fixpoint — exact
+    per-knob contention, not the old one-shot ``shard_costed``
+    approximation.  Rows against single-core measurements are only
+    comparable at ``n_cores=1``; the extra counts chart the knob grid's
+    scaling behaviour (and ``best`` is picked among the smallest swept
+    core count).
 
     Requires a table built with ``keep_programs=True``.  Returns an
     :class:`O3Sweep` (ranked results + the tuned ``HardwareSpec``).
-    See DESIGN.md §13 (the batched array kernel), §14 (the shard-mode
-    contention costing behind ``core_counts``) and §11 (what the knobs
-    mean); ``core.zoo.estimate_program`` is the same machinery pointed
-    at whole-application programs (DESIGN.md §15)."""
+    See DESIGN.md §13 (the batched array kernel), §17 (the batched node
+    engine behind ``core_counts``) and §11 (what the knobs mean);
+    ``core.zoo.estimate_program`` is the same machinery pointed at
+    whole-application programs (DESIGN.md §15)."""
     from .compiled import O3Knobs, compile_program, schedule_batch
-    from .node import shard_costed
+    from .node import compile_node, schedule_node_batch
     if not table.programs:
         raise ValueError("sweep_o3 needs kernel_accuracy_table("
                          "keep_programs=True)")
@@ -392,12 +394,13 @@ def sweep_o3(table: AccuracyTable, hw: HardwareSpec,
         for ci, n_cores in enumerate(core_counts):
             if n_cores == 1:
                 cp = compile_program(prog, hw, compute_dtype=compute_dtype)
+                t = schedule_batch(cp, knobs, backend=backend)
             else:
-                costed = shard_costed(prog, hw, n_cores, topology,
-                                      compute_dtype=compute_dtype)
-                cp = compile_program(prog, hw, compute_dtype=compute_dtype,
-                                     costed=costed)
-            t_us = schedule_batch(cp, knobs, backend=backend) * 1e6
+                nc = compile_node(prog, hw, compute_dtype=compute_dtype)
+                t = schedule_node_batch(nc, hw, knobs, n_cores, topology,
+                                        partition="shard",
+                                        backend=backend).t_est
+            t_us = t * 1e6
             diffs[r, ci] = np.abs(t_us - row.measured_us) \
                 / row.measured_us * 100.0
     mean_abs = diffs.mean(axis=0)

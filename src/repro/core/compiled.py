@@ -128,10 +128,12 @@ def compile_program(prog: Program, hw: HardwareSpec,
                     ) -> CompiledProgram:
     """Compile (and memoize on the Program) the SoA form.
 
-    The cache is keyed by ``(hw identity, dtype, links)``: an O3-knob
-    sweep passes the SAME spec object and hits the cache, so the grid
-    shares one CompiledProgram.  Knob variants created via ``with_`` get
-    their own entry (durations could differ via ``op_startup_ns``).
+    The cache is keyed by ``(hw VALUE, dtype, links)``: the frozen spec
+    compares by field values, so an O3-knob sweep that rebuilds a
+    value-equal spec (``dataclasses.replace`` / ``with_`` round trips)
+    still hits the cache and the grid shares one CompiledProgram.  Specs
+    that differ in any field get their own entry (durations could differ
+    via ``op_startup_ns``).
 
     A caller-supplied ``costed`` list bypasses the cache entirely (no
     lookup, no store): the caller may have edited the costs, and the key
@@ -140,8 +142,8 @@ def compile_program(prog: Program, hw: HardwareSpec,
     if costed is None:
         cache = prog.__dict__.setdefault("_compiled_cache", [])
         for chw, cdt, clk, ccp in cache:
-            if chw is hw and cdt == compute_dtype \
-                    and clk == links_per_collective:
+            if cdt == compute_dtype and clk == links_per_collective \
+                    and chw == hw:
                 return ccp
         costed = cost_program(prog, hw, links_per_collective, compute_dtype)
     else:

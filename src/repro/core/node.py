@@ -40,7 +40,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .compiled import PORTS, CompiledProgram, compile_program
+from .compiled import PORTS, CompiledProgram, O3Knobs, compile_program
 from .cost import OpTime, cost_program
 from .hlo import Program
 from .hwspec import HardwareSpec, NodeTopology
@@ -89,14 +89,16 @@ def compile_node(prog: Program, hw: HardwareSpec,
                  compute_dtype: Optional[str] = None,
                  costed: Optional[List[Optional[OpTime]]] = None
                  ) -> NodeCompiled:
-    """Compile (and memoize on the Program) the node form.  A caller-
-    supplied ``costed`` list bypasses the cache, mirroring
+    """Compile (and memoize on the Program) the node form.  The cache is
+    keyed by the frozen spec's VALUE (like ``compile_program``'s), so a
+    value-equal spec rebuilt via ``dataclasses.replace``/``with_`` hits
+    it.  A caller-supplied ``costed`` list bypasses the cache, mirroring
     ``compile_program``."""
     if costed is None:
         cache = prog.__dict__.setdefault("_node_cache", [])
         for chw, cdt, clk, cnc in cache:
-            if chw is hw and cdt == compute_dtype \
-                    and clk == links_per_collective:
+            if cdt == compute_dtype and clk == links_per_collective \
+                    and chw == hw:
                 return cnc
         costed = cost_program(prog, hw, links_per_collective, compute_dtype)
     else:
@@ -193,11 +195,21 @@ def _node_pass(durs, ports, indptr, indices, core_of, cmg_of_core,
     finishes = [0.0] * n
     starts = [0.0] * n
     rt_tail = [0.0] * n_cores                 # per-core worst retire seen
-    rt_hist: List[List[float]] = [[] for _ in range(n_cores)]
+    # Bounded ring buffers (they were O(n)-growing lists): the ROB check
+    # only ever reads the retire entry `window` positions back on the
+    # op's core, and the queue check the issue start `depth` back on the
+    # op's (core, port) — slot (pos - window) % window == pos % window,
+    # so one window-sized ring per core (and one depth-sized ring per
+    # pipe) replays the exact same reads.  A ring never needs more slots
+    # than the stream has ops: when window > n the read is unreachable.
+    rt_size = max(1, min(window, n))
+    rt_ring: List[Optional[List[float]]] = [None] * n_cores
+    rt_pos = [0] * n_cores                    # per-core ops seen (= old len)
     pipes: List[List[Optional[List[float]]]] = \
         [[None] * P for _ in range(n_cores)]
     hist: List[List[Optional[List[float]]]] = \
         [[None] * P for _ in range(n_cores)]
+    hist_pos = [[0] * P for _ in range(n_cores)]
     core_busy = [[0.0] * P for _ in range(n_cores)]
     core_finish = [0.0] * n_cores
     core_nops = [0] * n_cores
@@ -239,7 +251,11 @@ def _node_pass(durs, ports, indptr, indices, core_of, cmg_of_core,
                 f = finishes[indices[k]]
                 if f > ready:
                     ready = f
-        crt = rt_hist[c]
+        crt = rt_ring[c]
+        if crt is None:
+            crt = rt_ring[c] = [0.0] * rt_size
+        pos = rt_pos[c]
+        rt_pos[c] = pos + 1
         if p < 0:
             # free op: propagate readiness at zero cost; occupies a ROB slot
             finishes[i] = ready
@@ -248,38 +264,39 @@ def _node_pass(durs, ports, indptr, indices, core_of, cmg_of_core,
             if ready > rp:
                 rp = ready
                 rt_tail[c] = rp
-            crt.append(rp)
+            crt[pos % rt_size] = rp
             continue
         pl = pipes[c][p]
+        d = depths[p]
         if pl is None:
             pl = pipes[c][p] = [0.0] * widths[p]
-            hist[c][p] = []
+            hist[c][p] = [0.0] * d
         start = ready
         why = 0
         pf = min(pl)
         if pf > start:
             start, why = pf, 1
-        pos = len(crt)
         if pos >= window:
-            wt = crt[pos - window]
+            wt = crt[pos % rt_size]      # == (pos - window) % window
             if wt > start:
                 start, why = wt, 2
         h = hist[c][p]
-        d = depths[p]
-        if len(h) >= d:
-            qt = h[-d]
+        hp = hist_pos[c][p]
+        if hp >= d:
+            qt = h[hp % d]               # == (hp - d) % d
             if qt > start:
                 start, why = qt, 3
         finish = start + durs[i]
         pl[pl.index(pf)] = finish
-        h.append(start)
+        h[hp % d] = start
+        hist_pos[c][p] = hp + 1
         finishes[i] = finish
         starts[i] = start
         rp = rt_tail[c]
         if finish > rp:
             rp = finish
             rt_tail[c] = rp
-        crt.append(rp)
+        crt[pos % rt_size] = rp
         if finish > t_est:
             t_est = finish
         if finish > core_finish[c]:
@@ -430,8 +447,8 @@ def _eff_inv(nc: NodeCompiled, topo: NodeTopology, cores: np.ndarray,
     return inv_r, inv_w
 
 
-def _contended_durs(nc: NodeCompiled, inv_r_op: np.ndarray,
-                    inv_w_op: np.ndarray, scale: float) -> List[float]:
+def _contended_durs_arr(nc: NodeCompiled, inv_r_op: np.ndarray,
+                        inv_w_op: np.ndarray, scale: float) -> np.ndarray:
     """Per-op durations under the given per-op inverse bandwidths; work
     (flops/bytes/payload) scaled by ``scale`` (sharding), latency and
     startup unscaled (every core still issues its slice of each op)."""
@@ -442,7 +459,101 @@ def _contended_durs(nc: NodeCompiled, inv_r_op: np.ndarray,
     durs = (per + nc.startup) * nc.count
     # uncosted ops must stay zero-duration free ops
     durs[~nc.costed_mask] = 0.0
-    return durs.tolist()
+    return durs
+
+
+def _contended_durs(nc: NodeCompiled, inv_r_op: np.ndarray,
+                    inv_w_op: np.ndarray, scale: float) -> List[float]:
+    """List form of :func:`_contended_durs_arr` for the scalar pass."""
+    return _contended_durs_arr(nc, inv_r_op, inv_w_op, scale).tolist()
+
+
+def _resolve_partition(nc: NodeCompiled, topo: NodeTopology, n_cores: int,
+                       partition: str, core_of: Optional[np.ndarray]):
+    """Partition plumbing shared by the scalar and batched engines:
+    ``(sched_core_of, sched_cmgs, shard, scale, ring_lat, cores)``."""
+    shard = partition == "shard"
+    # cores used by this run (compact pinning: CMG c//cores_per_cmg)
+    cores = np.arange(n_cores, dtype=np.int64)
+    cmg_of_used = (cores // max(1, topo.cores_per_cmg)).tolist()
+    if shard:
+        sched_core_of = np.zeros(nc.n, dtype=np.int64)
+        sched_cmgs = [0]
+    elif core_of is not None:
+        sched_core_of = np.asarray(core_of, dtype=np.int64)
+        sched_cmgs = cmg_of_used
+    elif partition == "graph":
+        sched_core_of = partition_graph(nc, n_cores)
+        sched_cmgs = cmg_of_used
+    elif partition == "round-robin":
+        sched_core_of = partition_round_robin(nc.n, n_cores)
+        sched_cmgs = cmg_of_used
+    else:
+        raise ValueError(f"unknown partition {partition!r}")
+    ring_lat = topo.ring_latency_s if not shard else 0.0
+    scale = (1.0 / n_cores) if shard else 1.0
+    return sched_core_of, sched_cmgs, shard, scale, ring_lat, cores
+
+
+def _work_domains(nc: NodeCompiled, n_cores: int, shard: bool,
+                  sched_core_of: np.ndarray, cores: np.ndarray):
+    """Initial ``n_active`` (all ones) and per-domain active-core caps
+    (cores of each sharing domain that actually have costed work)."""
+    L = len(nc.level_names)
+    n_active = [np.ones(int(np.ceil(n_cores / nc.shared_by[li])))
+                for li in range(L)]
+    port_arr = np.asarray(nc.cp._port_l)
+    if shard:
+        work_cores = cores          # every virtual core runs the stream
+    else:
+        has_work = np.zeros(n_cores, dtype=bool)
+        has_work[sched_core_of[port_arr >= 0]] = True
+        work_cores = cores[has_work[cores]]
+    active_per_dom = [np.maximum(np.bincount(
+        work_cores // nc.shared_by[li],
+        minlength=len(n_active[li])).astype(float), 1.0)
+        for li in range(L)]
+    return n_active, active_per_dom
+
+
+def _update_active(nc: NodeCompiled, topo: NodeTopology, cores: np.ndarray,
+                   n_active: List[np.ndarray], sched_core_of: np.ndarray,
+                   shard: bool, scale: float, n_cores: int, t_node: float,
+                   active_per_dom: List[np.ndarray], damp: float):
+    """One fixpoint update of the concurrently-active estimates:
+    analytic per-core level-busy under the current bandwidths, then
+    ``n_active = damp * clamp(dom_busy / t_node, 1, active) + (1-damp) *
+    prev``.  Returns ``(new_active, delta)``.  Pure function of its
+    inputs — the batched driver replays the scalar trajectory with it."""
+    L = len(nc.level_names)
+    inv_r, inv_w = _eff_inv(nc, topo, cores, n_active)
+    stream_inv_r = inv_r[0] if shard else inv_r[sched_core_of]
+    stream_inv_w = inv_w[0] if shard else inv_w[sched_core_of]
+    contrib = (nc.rd * stream_inv_r + nc.wr * stream_inv_w) \
+        * (scale * nc.count)[:, None]
+    if shard:
+        core_level_busy = np.broadcast_to(contrib.sum(axis=0),
+                                          (n_cores, L))
+    delta = 0.0
+    new_active = []
+    for li in range(L):
+        if shard:
+            dom_busy = np.bincount(cores // nc.shared_by[li],
+                                   weights=core_level_busy[:, li],
+                                   minlength=len(n_active[li]))
+        else:
+            # domain-sum the per-op contributions directly (one weighted
+            # bincount; np.add.at into per-core rows was the hot spot)
+            dom_busy = np.bincount(sched_core_of // nc.shared_by[li],
+                                   weights=contrib[:, li],
+                                   minlength=len(n_active[li]))
+        target = np.clip(dom_busy / max(t_node, 1e-30), 1.0,
+                         active_per_dom[li])
+        nxt = damp * target + (1.0 - damp) * n_active[li]
+        delta = max(delta, float(np.abs(nxt - n_active[li]).max(
+            initial=0.0)))
+        new_active.append(nxt)
+    return new_active, delta
 
 
 def schedule_node(nc: NodeCompiled, hw: HardwareSpec, n_cores: int,
@@ -470,27 +581,9 @@ def schedule_node(nc: NodeCompiled, hw: HardwareSpec, n_cores: int,
     widths = [max(1, hw.issue_width.get(p, 1)) for p in PORTS]
     depths = [max(1, hw.queue_depth.get(p, 1)) for p in PORTS]
     window = max(1, hw.inflight_window)
-    L = len(nc.level_names)
-    shard = partition == "shard"
-    scale = (1.0 / n_cores) if shard else 1.0
-
-    # cores used by this run (compact pinning: CMG c//cores_per_cmg)
-    cores = np.arange(n_cores, dtype=np.int64)
+    sched_core_of, sched_cmgs, shard, scale, ring_lat, cores = \
+        _resolve_partition(nc, topo, n_cores, partition, core_of)
     cmg_of_used = (cores // max(1, topo.cores_per_cmg)).tolist()
-    if shard:
-        sched_core_of = np.zeros(nc.n, dtype=np.int64)
-        sched_cmgs = [0]
-    elif core_of is not None:
-        sched_core_of = np.asarray(core_of, dtype=np.int64)
-        sched_cmgs = cmg_of_used
-    elif partition == "graph":
-        sched_core_of = partition_graph(nc, n_cores)
-        sched_cmgs = cmg_of_used
-    elif partition == "round-robin":
-        sched_core_of = partition_round_robin(nc.n, n_cores)
-        sched_cmgs = cmg_of_used
-    else:
-        raise ValueError(f"unknown partition {partition!r}")
     core_of_l = sched_core_of.tolist()
 
     # a level is contended only when the topology caps it AND >1 core
@@ -499,30 +592,17 @@ def schedule_node(nc: NodeCompiled, hw: HardwareSpec, n_cores: int,
                    for nm in nc.level_names)
     contended = has_caps and n_cores > 1
 
-    # concurrently-active estimate per (level, sharing domain)
-    n_active = [np.ones(int(np.ceil(n_cores / nc.shared_by[li])))
-                for li in range(L)]
+    # concurrently-active estimate per (level, sharing domain) + the
     # cores of each domain that actually have costed work
-    port_arr = np.asarray(nc.cp._port_l)
-    if shard:
-        work_cores = cores          # every virtual core runs the stream
-    else:
-        has_work = np.zeros(n_cores, dtype=bool)
-        has_work[sched_core_of[port_arr >= 0]] = True
-        work_cores = cores[has_work[cores]]
-    active_per_dom = [np.maximum(np.bincount(
-        work_cores // nc.shared_by[li],
-        minlength=len(n_active[li])).astype(float), 1.0)
-        for li in range(L)]
+    n_active, active_per_dom = _work_domains(nc, n_cores, shard,
+                                             sched_core_of, cores)
 
-    ring_lat = topo.ring_latency_s if not shard else 0.0
     ports_l = cp._port_l
     indptr_l = cp._indptr_l
     indices_l = cp._indices_l
 
     t_zero = None
     iterations = 0
-    counts = nc.count
     final = not contended
     while True:
         iterations += 1
@@ -533,7 +613,6 @@ def schedule_node(nc: NodeCompiled, hw: HardwareSpec, n_cores: int,
             # bit-for-bit (recomposing t_mem from the per-level split
             # reassociates float adds)
             durs = cp._dur_l
-            inv_r = inv_w = None
         else:
             inv_r, inv_w = _eff_inv(nc, topo, cores, n_active)
             if shard:
@@ -551,33 +630,10 @@ def schedule_node(nc: NodeCompiled, hw: HardwareSpec, n_cores: int,
             t_zero = t_node
         if final:
             break
-        # analytic per-core level-busy under the bandwidths just used
-        if inv_r is None:
-            inv_r, inv_w = _eff_inv(nc, topo, cores, n_active)
-        stream_inv_r = inv_r[0] if shard else inv_r[sched_core_of]
-        stream_inv_w = inv_w[0] if shard else inv_w[sched_core_of]
-        contrib = (nc.rd * stream_inv_r + nc.wr * stream_inv_w) \
-            * (scale * counts)[:, None]
-        if shard:
-            core_level_busy = np.broadcast_to(contrib.sum(axis=0),
-                                              (n_cores, L))
-        else:
-            core_level_busy = np.zeros((n_cores, L))
-            np.add.at(core_level_busy, sched_core_of, contrib)
-        delta = 0.0
-        new_active = []
         damp = 0.5 if iterations > 1 else 1.0
-        for li in range(L):
-            dom_busy = np.bincount(cores // nc.shared_by[li],
-                                   weights=core_level_busy[:, li],
-                                   minlength=len(n_active[li]))
-            target = np.clip(dom_busy / max(t_node, 1e-30), 1.0,
-                             active_per_dom[li])
-            nxt = damp * target + (1.0 - damp) * n_active[li]
-            delta = max(delta, float(np.abs(nxt - n_active[li]).max(
-                initial=0.0)))
-            new_active.append(nxt)
-        n_active = new_active
+        n_active, delta = _update_active(
+            nc, topo, cores, n_active, sched_core_of, shard, scale,
+            n_cores, t_node, active_per_dom, damp)
         if delta == 0.0:
             # n_active (hence durations) unchanged: the pass just taken
             # IS the converged schedule — no re-run needed (the common
@@ -655,6 +711,464 @@ def schedule_node(nc: NodeCompiled, hw: HardwareSpec, n_cores: int,
         t_zero_contention=t_zero, iterations=iterations,
         core_of=sched_core_of, starts=np.asarray(starts),
         finishes=np.asarray(finishes))
+
+
+# ------------------------------------------------------- batched engine
+@dataclass
+class NodeCompiledBatch:
+    """Partition-resolved node form for the batched engine (DESIGN.md
+    §17): everything about the pass that does NOT depend on the knob
+    combo or the duration row — stream assignment, per-stream op
+    positions, per-(stream, port) costed-op positions, and the
+    precomputed ring-latency addend per def-use edge (the cross-CMG edge
+    mask, folded with the free-op home inheritance once at compile
+    time).  ``_node_pass_batch`` runs any number of (knobs x durations)
+    batch elements over one of these in lockstep."""
+    nc: NodeCompiled
+    topo: NodeTopology
+    partition: str
+    shard: bool
+    ring_lat: float
+    sched_core_of: np.ndarray        # [n] scheduling stream per op
+    core_of_l: List[int]             # python mirror of sched_core_of
+    cmg_of_stream: List[int]         # per scheduled stream
+    n_streams: int
+    pos_in_core: np.ndarray          # [n] running op index on its stream
+    pos_in_cp: np.ndarray            # [n] costed-op index on its pipe
+    cpid: np.ndarray                 # [n] stream * P + port (0 for free)
+    core_ops: np.ndarray             # [S] ops per stream (free included)
+    cp_counts: np.ndarray            # [S * P] costed ops per pipe
+    edge_extra: Optional[np.ndarray]  # [E] ring addend per CSR edge
+
+
+def compile_node_batch(nc: NodeCompiled, hw: HardwareSpec, n_cores: int,
+                       topology: Optional[NodeTopology] = None,
+                       partition: str = "shard",
+                       core_of: Optional[np.ndarray] = None
+                       ) -> NodeCompiledBatch:
+    """Resolve a partition of ``nc`` into the batched pass form.  In
+    shard mode the structure is core-count independent (one stream, no
+    ring), so one form serves a whole core-count sweep."""
+    topo = topology or hw.topology or NodeTopology.degenerate(n_cores)
+    if n_cores < 1 or n_cores > max(topo.n_cores, 1):
+        raise ValueError(f"n_cores={n_cores} outside topology "
+                         f"{topo.name} (max {topo.n_cores})")
+    sched_core_of, sched_cmgs, shard, _scale, ring_lat, _cores = \
+        _resolve_partition(nc, topo, n_cores, partition, core_of)
+    n = nc.n
+    P = len(PORTS)
+    ports = nc.cp._port_l
+    indptr = nc.cp._indptr_l
+    indices = nc.cp._indices_l
+    core_l = sched_core_of.tolist()
+    S = len(sched_cmgs)
+    pos_in_core = np.zeros(n, dtype=np.int64)
+    pos_in_cp = np.zeros(n, dtype=np.int64)
+    cpid = np.zeros(n, dtype=np.int64)
+    core_ops = [0] * S
+    cp_counts = [0] * (S * P)
+    for i in range(n):
+        c = core_l[i]
+        pos_in_core[i] = core_ops[c]
+        core_ops[c] += 1
+        p = ports[i]
+        if p >= 0:
+            pid = c * P + p
+            cpid[i] = pid
+            pos_in_cp[i] = cp_counts[pid]
+            cp_counts[pid] += 1
+    edge_extra = None
+    if ring_lat > 0.0 and S > 1:
+        # fold the scalar pass's home-CMG walk into a per-edge addend:
+        # free ops inherit their binding producer's home, costed ops
+        # charge ring_lat on every edge from a foreign-home producer
+        edge_extra = np.zeros(len(indices))
+        home = [0] * n
+        for i in range(n):
+            mycmg = sched_cmgs[core_l[i]]
+            if ports[i] < 0:
+                home[i] = (home[indices[indptr[i]]]
+                           if indptr[i + 1] > indptr[i] else mycmg)
+            else:
+                for k in range(indptr[i], indptr[i + 1]):
+                    if home[indices[k]] != mycmg:
+                        edge_extra[k] = ring_lat
+                home[i] = mycmg
+        if not edge_extra.any():
+            edge_extra = None
+    return NodeCompiledBatch(
+        nc=nc, topo=topo, partition=partition, shard=shard,
+        ring_lat=ring_lat, sched_core_of=sched_core_of, core_of_l=core_l,
+        cmg_of_stream=list(sched_cmgs), n_streams=S,
+        pos_in_core=pos_in_core, pos_in_cp=pos_in_cp, cpid=cpid,
+        core_ops=np.asarray(core_ops, dtype=np.int64),
+        cp_counts=np.asarray(cp_counts, dtype=np.int64),
+        edge_extra=edge_extra)
+
+
+def _node_pass_batch(nb: NodeCompiledBatch, durs_cols: np.ndarray,
+                     window: np.ndarray, width: np.ndarray,
+                     depth: np.ndarray) -> np.ndarray:
+    """One vectorized in-order pass: M batch elements (knob combo x
+    duration row) advance op-by-op in lockstep, each replaying the
+    scalar ``_node_pass``'s float operations in the same order — every
+    element's result is bit-identical to the reference kernel's (the
+    node differential suite pins it).  ``durs_cols`` is ``[n, M]``
+    (element durations as columns); ``window [M]``, ``width/depth
+    [M, P]``.  Returns ``t_est [M]``."""
+    nc = nb.nc
+    n = nc.n
+    M = len(window)
+    if n == 0 or M == 0:
+        return np.zeros(M)
+    P = len(PORTS)
+    indptr = nc.cp.dep_indptr
+    indices = nc.cp.dep_indices
+    ports = nc.cp._port_l
+    extra = nb.edge_extra
+    core_l = nb.core_of_l
+    pos_core = nb.pos_in_core.tolist()
+    pos_cp = nb.pos_in_cp.tolist()
+    cpid_l = nb.cpid.tolist()
+    S = nb.n_streams
+    arange_m = np.arange(M)
+    zeros_m = np.zeros(M)                          # read-only
+    finishes = np.empty((n, M))
+    # Rings sized EXACTLY max(window) / max(depth[:, p]) need no
+    # validity masking: a read at slot (pos - window_m) % wmax either
+    # hits the live entry `window_m` back (age <= wmax, never yet
+    # overwritten) or — when pos < window_m — an unwritten slot still
+    # holding 0.0, which is a no-op under max against a non-negative
+    # start.  Read slots are precomputed per (position, element) so the
+    # hot loop is pure gathers.
+    wmax = int(window.max())
+    rt_rings: List[Optional[np.ndarray]] = [None] * S
+    rt_tail = np.zeros((S, M))
+    max_pos = int(max(nb.core_ops.max(), 1))
+    rob_slot = (np.arange(max_pos)[:, None] - window[None, :]) % wmax
+    dmax = [max(1, int(d)) for d in depth.max(axis=0)]      # per port
+    q_slot: List[Optional[np.ndarray]] = [None] * P
+    for p in range(P):
+        mq = int(nb.cp_counts[np.arange(S) * P + p].max(initial=0))
+        if mq > 0:
+            q_slot[p] = (np.arange(mq)[:, None] - depth[None, :, p]) \
+                % dmax[p]
+    pipes: List[Optional[np.ndarray]] = [None] * (S * P)
+    hists: List[Optional[np.ndarray]] = [None] * (S * P)
+    lane_arange = np.arange(max(1, int(width.max())))
+    maximum = np.maximum
+
+    for i in range(n):
+        lo = indptr[i]
+        hi = indptr[i + 1]
+        nd = hi - lo
+        if nd == 1:
+            j = indices[lo]
+            if extra is None or extra[lo] == 0.0:
+                ready = finishes[j]        # view; never written through
+            else:
+                ready = finishes[j] + extra[lo]
+        elif nd == 0:
+            ready = zeros_m
+        else:
+            dep_f = finishes[indices[lo:hi]]
+            if extra is not None:
+                ex = extra[lo:hi]
+                if ex.any():
+                    dep_f = dep_f + ex[:, None]
+            ready = dep_f.max(axis=0)
+        c = core_l[i]
+        rr = rt_rings[c]
+        if rr is None:
+            rr = rt_rings[c] = np.zeros((wmax, M))
+        pos = pos_core[i]
+        rt = rt_tail[c]
+        p = ports[i]
+        if p < 0:
+            finishes[i] = ready
+            maximum(rt, ready, out=rt)
+            rr[pos % wmax] = rt
+            continue
+        pid = cpid_l[i]
+        pl = pipes[pid]
+        if pl is None:
+            w = width[:, p]
+            pl = pipes[pid] = np.where(
+                lane_arange[None, :int(w.max())] < w[:, None], 0.0,
+                np.inf)
+            hists[pid] = np.zeros((dmax[p], M))
+        lane = pl.argmin(axis=1)           # first-min lane, = scalar's
+        start = maximum(ready, pl[arange_m, lane])
+        maximum(start, rr[rob_slot[pos], arange_m], out=start)
+        h = hists[pid]
+        qp = pos_cp[i]
+        maximum(start, h[q_slot[p][qp], arange_m], out=start)
+        finish = start + durs_cols[i]
+        pl[arange_m, lane] = finish
+        h[qp % dmax[p]] = start
+        finishes[i] = finish
+        maximum(rt, finish, out=rt)
+        rr[pos % wmax] = rt
+    cm = nc.costed_mask
+    return np.max(finishes, axis=0, where=cm[:, None], initial=0.0)
+
+
+def _node_pass_batch_jax(nb: NodeCompiledBatch, durs_cols: np.ndarray,
+                         window: np.ndarray, width: np.ndarray,
+                         depth: np.ndarray) -> np.ndarray:
+    """``jax.lax.scan`` variant of :func:`_node_pass_batch` (the
+    ``schedule_batch_jax`` pattern, vmapped over batch elements in
+    x64): one fused XLA program per (structure, ring sizes) — agreeing
+    with the numpy kernel to float tolerance, not bit-exactly (XLA may
+    reassociate).  The jitted fn is cached on the batch form."""
+    import jax
+    import jax.numpy as jnp
+
+    nc = nb.nc
+    n = nc.n
+    M = len(window)
+    if n == 0 or M == 0:
+        return np.zeros(M)
+    P = len(PORTS)
+    wmax = max(1, int(width.max()))
+    max_core_ops = max(1, int(nb.core_ops.max()))
+    max_cp = max(1, int(nb.cp_counts.max()))
+    S = nb.n_streams
+    key = (wmax, max_core_ops, max_cp)
+    fns = nb.__dict__.setdefault("_jax_fns", {})
+    fn = fns.get(key)
+    if fn is None:
+        indptr = nc.cp.dep_indptr
+        deg = np.diff(indptr)
+        maxdeg = max(1, int(deg.max()) if n else 1)
+        deps_pad = np.full((n, maxdeg), -1, dtype=np.int64)
+        extra_pad = np.zeros((n, maxdeg))
+        for i in range(n):
+            lo, hi = int(indptr[i]), int(indptr[i + 1])
+            deps_pad[i, :hi - lo] = nc.cp.dep_indices[lo:hi]
+            if nb.edge_extra is not None:
+                extra_pad[i, :hi - lo] = nb.edge_extra[lo:hi]
+        port_eff = np.maximum(nc.cp.port_id.astype(np.int64), 0)
+        costed = nc.cp.port_id >= 0
+        row_port = np.arange(S * P, dtype=np.int64) % P
+
+        def one(win, wid, dep, durs):
+            pipes0 = jnp.where(
+                jnp.arange(wmax)[None, :] < wid[row_port][:, None],
+                0.0, jnp.inf)
+            carry0 = (jnp.zeros(n), jnp.zeros((S, max_core_ops)),
+                      jnp.zeros(S), pipes0, jnp.zeros((S * P, max_cp)),
+                      0.0)
+            xs = (jnp.arange(n), jnp.asarray(durs),
+                  jnp.asarray(port_eff), jnp.asarray(costed),
+                  jnp.asarray(deps_pad), jnp.asarray(extra_pad),
+                  jnp.asarray(nb.sched_core_of), jnp.asarray(nb.cpid),
+                  jnp.asarray(nb.pos_in_core), jnp.asarray(nb.pos_in_cp))
+
+            def body(carry, x):
+                fin, rt, rt_tail, pipes, hist, t_best = carry
+                (i, dur, pid, is_costed, deps, extras, c, cp_i, pos,
+                 poscp) = x
+                ready = jnp.max(jnp.where(
+                    deps >= 0, fin[jnp.clip(deps, 0)] + extras, 0.0))
+                row = pipes[cp_i]
+                pf = row.min()
+                widx = pos - win
+                wt = jnp.where(widx >= 0, rt[c, jnp.clip(widx, 0)], 0.0)
+                qidx = poscp - dep[pid]
+                qt = jnp.where(qidx >= 0,
+                               hist[cp_i, jnp.clip(qidx, 0)], 0.0)
+                start = jnp.maximum(jnp.maximum(ready, pf),
+                                    jnp.maximum(wt, qt))
+                finish = start + dur
+                fin_i = jnp.where(is_costed, finish, ready)
+                pipes = pipes.at[cp_i, row.argmin()].set(
+                    jnp.where(is_costed, finish, row[row.argmin()]))
+                hist = hist.at[cp_i, poscp].set(
+                    jnp.where(is_costed, start, hist[cp_i, poscp]))
+                tail = jnp.maximum(rt_tail[c], fin_i)
+                t_best = jnp.where(is_costed,
+                                   jnp.maximum(t_best, finish), t_best)
+                return (fin.at[i].set(fin_i), rt.at[c, pos].set(tail),
+                        rt_tail.at[c].set(tail), pipes, hist,
+                        t_best), None
+
+            (_, _, _, _, _, t), _ = jax.lax.scan(body, carry0, xs)
+            return t
+
+        fn = fns[key] = jax.jit(jax.vmap(one, in_axes=(0, 0, 0, 0)))
+    from jax.experimental import enable_x64
+    with enable_x64():
+        out = fn(jnp.asarray(window), jnp.asarray(width),
+                 jnp.asarray(depth),
+                 jnp.asarray(np.ascontiguousarray(durs_cols.T)))
+        return np.asarray(out)
+
+
+@dataclass
+class NodeBatchResult:
+    """Per-element results of a batched node run: contention-aware
+    makespans, the zero-contention first pass, and each element's
+    fixpoint pass count (``[M]`` arrays, one entry per knob combo /
+    sweep cell)."""
+    t_est: np.ndarray
+    t_zero_contention: np.ndarray
+    iterations: np.ndarray
+
+    @property
+    def total_scheduled_ops(self) -> int:
+        """Op-instances actually scheduled: every fixpoint pass of every
+        element is a full in-order schedule of the program (the bench's
+        throughput accounting)."""
+        return int(self.iterations.sum())
+
+
+def _batch_context(nb: NodeCompiledBatch, n_cores: int) -> dict:
+    """Fixpoint-state template for one core count on ``nb``.  Everything
+    but ``n_active`` is read-only and shared across batch elements; use
+    :func:`_clone_context` for each element's own state machine."""
+    cores = np.arange(n_cores, dtype=np.int64)
+    has_caps = any(nm in nb.topo.shared_read_bw
+                   or nm in nb.topo.shared_write_bw
+                   for nm in nb.nc.level_names)
+    n_active, active_per_dom = _work_domains(
+        nb.nc, n_cores, nb.shard, nb.sched_core_of, cores)
+    return {"n_cores": n_cores, "cores": cores,
+            "scale": (1.0 / n_cores) if nb.shard else 1.0,
+            "contended": has_caps and n_cores > 1,
+            "n_active": n_active, "active_per_dom": active_per_dom}
+
+
+def _clone_context(tmpl: dict) -> dict:
+    """Per-element copy of a context template (fresh ``n_active``)."""
+    return {**tmpl, "n_active": [a.copy() for a in tmpl["n_active"]]}
+
+
+def _fixpoint_batch(nb: NodeCompiledBatch, contexts: List[dict],
+                    knobs, max_iters: int, tol: float,
+                    backend: str) -> NodeBatchResult:
+    """The bandwidth-contention fixpoint as a vectorized outer loop over
+    the batched pass: every element carries its own ``n_active`` state
+    machine (replaying the scalar ``schedule_node`` trajectory exactly —
+    same damping, same stop rules), elements drop out of the pass as
+    they converge, and each pass schedules only the still-active
+    columns."""
+    nc = nb.nc
+    cp = nc.cp
+    M = knobs.batch
+    n = nc.n
+    t_est = np.zeros(M)
+    t_zero = np.zeros(M)
+    iters = np.zeros(M, dtype=np.int64)
+    if n == 0 or M == 0:
+        return NodeBatchResult(t_est, t_zero, iters)
+    pass_fn = _node_pass_batch_jax if backend == "jax" \
+        else _node_pass_batch
+    # the numpy pass compacts converged elements out of later passes;
+    # the jax pass keeps the full batch (a shrinking batch axis would
+    # re-trace the jitted scan per distinct size)
+    compact = backend != "jax"
+    durs_cols = np.empty((n, M))
+    done = np.zeros(M, dtype=bool)
+    final = np.fromiter((not ctx["contended"] for ctx in contexts),
+                        dtype=bool, count=M)
+    stale = np.ones(M, dtype=bool)      # durations need (re)computing
+    first = True
+    while not done.all():
+        active = ~done
+        for m in np.nonzero(active & stale)[0]:
+            ctx = contexts[m]
+            uncontended = all(float(a.max(initial=1.0)) <= 1.0
+                              for a in ctx["n_active"])
+            if uncontended and ctx["scale"] == 1.0:
+                # exact path, same as the scalar engine's
+                durs_cols[:, m] = cp.durations
+            else:
+                inv_r, inv_w = _eff_inv(nc, nb.topo, ctx["cores"],
+                                        ctx["n_active"])
+                row, row_w = (inv_r[0], inv_w[0]) if nb.shard else \
+                    (inv_r[nb.sched_core_of], inv_w[nb.sched_core_of])
+                durs_cols[:, m] = _contended_durs_arr(
+                    nc, row, row_w, ctx["scale"])
+            stale[m] = False
+        idx = np.nonzero(active)[0]
+        if compact:
+            t = pass_fn(nb, durs_cols[:, idx], knobs.window[idx],
+                        knobs.width[idx], knobs.depth[idx])
+            t_est[idx] = t
+        else:
+            t = pass_fn(nb, durs_cols, knobs.window, knobs.width,
+                        knobs.depth)
+            t_est[idx] = t[idx]
+        iters[idx] += 1
+        if first:
+            t_zero[:] = t_est           # pass 1 runs every element
+            first = False
+        done |= active & final
+        for m in np.nonzero(active & ~final)[0]:
+            ctx = contexts[m]
+            damp = 0.5 if iters[m] > 1 else 1.0
+            ctx["n_active"], delta = _update_active(
+                nc, nb.topo, ctx["cores"], ctx["n_active"],
+                nb.sched_core_of, nb.shard, ctx["scale"],
+                ctx["n_cores"], float(t_est[m]), ctx["active_per_dom"],
+                damp)
+            if delta == 0.0:
+                done[m] = True          # the pass just taken converged
+            else:
+                stale[m] = True
+                final[m] = delta < tol or iters[m] >= max_iters
+    return NodeBatchResult(t_est, t_zero, iters)
+
+
+def schedule_node_batch(nc: NodeCompiled, hw: HardwareSpec, knobs,
+                        n_cores: int,
+                        topology: Optional[NodeTopology] = None,
+                        partition: str = "shard",
+                        core_of: Optional[np.ndarray] = None,
+                        max_iters: int = 8, tol: float = 1e-2,
+                        backend: str = "numpy") -> NodeBatchResult:
+    """Batched node engine: one contention-aware node estimate per knob
+    combo in ``knobs`` (an :class:`~.compiled.O3Knobs` batch), all
+    combos advancing in lockstep through the vectorized pass.  Each
+    element is bit-identical to ``schedule_node`` under a spec carrying
+    the same knobs (``backend="jax"`` trades bit-exactness for a fused
+    ``lax.scan``)."""
+    nb = compile_node_batch(nc, hw, n_cores, topology, partition, core_of)
+    tmpl = _batch_context(nb, n_cores)
+    contexts = [_clone_context(tmpl) for _ in range(knobs.batch)]
+    return _fixpoint_batch(nb, contexts, knobs, max_iters, tol, backend)
+
+
+def schedule_node_sweep(nc: NodeCompiled, hw: HardwareSpec, knobs,
+                        core_counts, topology: Optional[NodeTopology] = None,
+                        partition: str = "shard", max_iters: int = 8,
+                        tol: float = 1e-2,
+                        backend: str = "numpy") -> np.ndarray:
+    """Core-count x knob-grid sweep as one fused batch: ``t_est [C, B]``
+    seconds.  Shard mode (the zoo's) shares one batch form across every
+    core count — the whole sweep is a single ``C*B``-element run of the
+    batched pass; op partitions fall back to one batch per count (their
+    stream structure depends on the count)."""
+    core_counts = list(core_counts)
+    B = knobs.batch
+    if partition == "shard":
+        nb = compile_node_batch(nc, hw, max(core_counts), topology,
+                                partition)
+        tiled = O3Knobs(window=np.tile(knobs.window, len(core_counts)),
+                        width=np.tile(knobs.width, (len(core_counts), 1)),
+                        depth=np.tile(knobs.depth, (len(core_counts), 1)))
+        tmpls = {k: _batch_context(nb, k) for k in core_counts}
+        contexts = [_clone_context(tmpls[k])
+                    for k in core_counts for _ in range(B)]
+        res = _fixpoint_batch(nb, contexts, tiled, max_iters, tol,
+                              backend)
+        return res.t_est.reshape(len(core_counts), B)
+    rows = [schedule_node_batch(nc, hw, knobs, k, topology, partition,
+                                max_iters=max_iters, tol=tol,
+                                backend=backend).t_est
+            for k in core_counts]
+    return np.stack(rows)
 
 
 def simulate_node(prog: Program, hw: HardwareSpec, n_cores: int,

@@ -37,10 +37,19 @@ class Stats:
             self._stack.pop()
 
     def add(self, counter: str, value: float = 1.0) -> None:
-        """Adds to the innermost active section AND the global section."""
-        self._sections[self._stack[-1]][counter] += value
-        if self._stack[-1] != "__global__":
-            self._sections["__global__"][counter] += value
+        """Adds to EVERY active section (the full nesting stack).
+
+        Enclosing sections see their nested sections' counters — a
+        ``steady`` region that wraps per-batch subsections still reports
+        the total — and ``__global__`` (always the stack's base) keeps
+        accumulating across sections.  A section re-entered recursively
+        on the stack is credited once.
+        """
+        seen = set()
+        for name in self._stack:
+            if name not in seen:
+                seen.add(name)
+                self._sections[name][counter] += value
 
     # -------------------------------------------------------------- queries
     def get(self, counter: str, section: str = "__global__") -> float:

@@ -16,10 +16,11 @@ kernels/HLO path and the multi-core node engine, one pipeline:
 2. **Estimate** — each program is sharded over the
    :class:`~.hwspec.NodeTopology` and scheduled by the contention-aware
    node engine (``core.node``, DESIGN.md §14) across a core-count axis,
-   and the batched O3 knob grid (``core.compiled.schedule_batch`` over
-   ``calibrate.default_o3_knobs``) rides the same compiled forms — per
-   model, per phase, per core count: cycle estimates, the zero-contention
-   bound, bound-by classification and roofline terms.
+   and the batched O3 knob grid runs as one fused core-count x knob
+   sweep through the batched node engine
+   (``core.node.schedule_node_sweep``, DESIGN.md §17) — per model, per
+   phase, per core count: cycle estimates, the zero-contention bound,
+   bound-by classification and roofline terms.
 3. **Rank** — per phase, models are ranked by estimated time at every core
    count, and Kendall-tau rank correlations across the core-count axis
    (plus against active parameter count) quantify rank *stability* — the
@@ -41,7 +42,7 @@ from ..configs import ARCHS, ZOO_SHAPES, reduced_config, zoo_phases_for
 from ..configs.base import ModelConfig, ShapeConfig
 from .hlo import Program, parse_program
 from .hwspec import A64FX_CORE, HardwareSpec, NodeTopology
-from .node import compile_node, schedule_node, shard_costed
+from .node import compile_node, schedule_node, schedule_node_sweep
 from .roofline import roofline_from_program
 
 #: Core counts the default sweep estimates at: one core, one full CMG,
@@ -370,13 +371,12 @@ def estimate_program(prog: Program, hw: HardwareSpec = A64FX_CORE,
     The program is costed once (``compile_node`` memoizes the node form on
     the ``Program``); only the node schedule reruns per core count.  When
     ``o3_knobs`` (an :class:`~.compiled.O3Knobs` batch) is given, the
-    batched scheduler (``schedule_batch``) additionally sweeps the knob
-    grid over the shard-contended compiled form at every core count and
-    records the best combo — the ``calibrate.sweep_o3`` machinery pointed
-    at applications instead of microkernels.
+    batched node engine (``core.node.schedule_node_sweep``) runs the
+    whole core-count x knob grid as ONE fused batch — every cell gets
+    its own exact contention fixpoint — and the best combo per count is
+    recorded: the ``calibrate.sweep_o3`` machinery pointed at
+    applications instead of microkernels (DESIGN.md §17).
     """
-    from .compiled import compile_program, schedule_batch
-
     topo = topology or hw.topology or NodeTopology.degenerate(
         max(core_counts))
     nc = compile_node(prog, hw, compute_dtype=compute_dtype)
@@ -387,7 +387,11 @@ def estimate_program(prog: Program, hw: HardwareSpec = A64FX_CORE,
         flops=prog.flops, bytes_accessed=prog.bytes_accessed,
         roofline_dominant=rf.dominant,
         roofline_fraction=rf.roofline_fraction)
-    for k in core_counts:
+    knob_ts = None
+    if o3_knobs is not None:
+        knob_ts = schedule_node_sweep(nc, hw, o3_knobs, core_counts,
+                                      topology=topo, partition=partition)
+    for ki, k in enumerate(core_counts):
         nr = schedule_node(nc, hw, k, topology=topo, partition=partition)
         ce = CoreCountEstimate(
             n_cores=k, t_est_s=nr.t_est,
@@ -395,15 +399,8 @@ def estimate_program(prog: Program, hw: HardwareSpec = A64FX_CORE,
             parallel_efficiency=nr.parallel_efficiency,
             bound_by=nr.schedule.bound_by,
             shared_n_active=dict(nr.per_cmg[0].n_active))
-        if o3_knobs is not None:
-            if k == 1:
-                cp = compile_program(prog, hw, compute_dtype=compute_dtype)
-            else:
-                costed = shard_costed(prog, hw, k, topo,
-                                      compute_dtype=compute_dtype)
-                cp = compile_program(prog, hw, compute_dtype=compute_dtype,
-                                     costed=costed)
-            ts = schedule_batch(cp, o3_knobs)
+        if knob_ts is not None:
+            ts = knob_ts[ki]
             best = int(ts.argmin())
             ce.t_best_knobs_s = float(ts[best])
             ce.best_knobs = {

@@ -299,3 +299,25 @@ def test_stats_sections_and_delta():
     assert d["steps"] == 7
     assert d["tokens"] == 100
     assert "warmup" in s.report() and "steady" in s.report()
+
+
+def test_stats_nested_sections_credit_enclosing():
+    """add() credits the FULL active stack: an enclosing section sees its
+    nested sections' counters (regression — only the innermost section
+    and __global__ used to be credited)."""
+    s = Stats()
+    with s.section("steady"):
+        s.add("steps", 2)
+        with s.section("batch"):
+            s.add("steps", 5)
+            s.add("tokens", 50)
+    assert s.get("steps", "steady") == 7         # encloser sees nested
+    assert s.get("tokens", "steady") == 50
+    assert s.get("steps", "batch") == 5
+    assert s.get("steps") == 7                   # global credited once
+    # recursive re-entry is credited once, not twice
+    with s.section("steady"):
+        with s.section("steady"):
+            s.add("steps", 1)
+    assert s.get("steps", "steady") == 8
+    assert s.get("steps") == 8

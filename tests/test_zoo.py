@@ -119,7 +119,7 @@ def test_estimate_program_core_axis_and_sandwich():
         pe.at(7)
 
 
-def test_estimate_program_o3_grid_rides_shard_costed_forms():
+def test_estimate_program_o3_grid_rides_batched_node_engine():
     prog = synthetic_program()
     knobs = zoo_o3_knobs(A64FX_CORE)
     pe = estimate_program(prog, A64FX_CORE, core_counts=(1, 12),
@@ -129,8 +129,10 @@ def test_estimate_program_o3_grid_rides_shard_costed_forms():
         assert set(ce.best_knobs) == {"inflight_window", "mem_issue_width",
                                       "vpu_issue_width", "queue_depth"}
         # the zoo grid contains the spec's own default knob combo
-        # (window 64, mem 2, vpu 1, qdepth 16), so the grid minimum can
-        # only beat or tie the node estimate (float-reassociation slack)
+        # (window 64, mem 2, vpu 1, qdepth 16), and the grid now runs
+        # the exact contended engine (DESIGN.md §17) at every core
+        # count, so the grid minimum can only beat or tie the node
+        # estimate (float-reassociation slack)
         assert ce.t_best_knobs_s <= ce.t_est_s * (1 + 1e-6)
 
 
