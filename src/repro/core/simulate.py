@@ -22,6 +22,7 @@ from .hwspec import HardwareSpec, NodeTopology, TPU_V5E
 from .node import NodeResult, simulate_node
 from .pa import pa_report
 from .roofline import Roofline, roofline_from_program
+from .sample import SampledNodeResult, SamplingConfig, sampled_schedule_node
 from .schedule import ScheduleResult, schedule_program
 
 
@@ -48,12 +49,16 @@ class SimReport:
     program: Optional[Program] = None
     # multi-core node engine result (engine="node")
     node: Optional[NodeResult] = None
+    # sampled node estimation (engine="node" + sampling=; DESIGN.md §18)
+    sampled: Optional[SampledNodeResult] = None
 
     @property
     def t_est(self) -> float:
-        """Headline estimate: node-derived in node mode, schedule-derived
-        when the O3 engine ran as the primary mode, flat-occupancy
-        otherwise (both always carried)."""
+        """Headline estimate: sampled-node or node-derived in node mode,
+        schedule-derived when the O3 engine ran as the primary mode,
+        flat-occupancy otherwise (both always carried)."""
+        if self.engine_mode == "node" and self.sampled is not None:
+            return self.sampled.t_est
         if self.engine_mode == "node" and self.node is not None:
             return self.node.t_est
         if self.engine_mode == "schedule" and self.schedule is not None:
@@ -120,6 +125,22 @@ class SimReport:
                      "occupancy": g.occupancy}
                     for g in nr.per_cmg],
             }
+        if self.sampled is not None:
+            sm = self.sampled
+            d["sampled"] = {
+                "t_est": sm.t_est,
+                "n_cores": sm.n_cores,
+                "partition": sm.partition,
+                "k": sm.plan.k,
+                "n_intervals": sm.plan.n_intervals,
+                "interval_ops": sm.plan.config.interval_ops,
+                "seed": sm.plan.config.seed,
+                "frac_ops_scheduled": sm.frac_ops_scheduled,
+                "t_zero_contention": sm.t_zero_contention,
+                "bound_by": sm.bound_by,
+                "port_busy": sm.port_busy,
+                "traffic_by_level": sm.traffic_by_level,
+            }
         return json.dumps(d, indent=1, sort_keys=True)
 
 
@@ -154,7 +175,8 @@ def simulate(compiled, hw: HardwareSpec = TPU_V5E, n_chips: int = 1,
              title: str = "", engine: str = "occupancy",
              n_cores: int = 1,
              topology: Optional[NodeTopology] = None,
-             node_partition: str = "round-robin") -> SimReport:
+             node_partition: str = "round-robin",
+             sampling: Optional[SamplingConfig] = None) -> SimReport:
     """Simulate one compiled program on ``hw``: the paper's end-to-end flow
     (application binary -> execution-time estimate + PA data, DESIGN.md §2).
 
@@ -178,6 +200,14 @@ def simulate(compiled, hw: HardwareSpec = TPU_V5E, n_chips: int = 1,
         ``report.t_est`` is the contention-aware node makespan and the PA
         report gains the per-CMG contention section.
 
+    ``sampling`` (node mode only) switches the node estimate to the
+    SimPoint-style sampled path (``core.sample``, DESIGN.md §18): the
+    program is sliced into intervals, clustered by signature, and only
+    cluster representatives are scheduled; ``report.sampled`` carries the
+    reconstruction and ``report.t_est`` comes from it.  Use for long
+    traces (full-depth steps, multi-token decode) where scheduling every
+    op is the bottleneck.
+
     Returns a :class:`SimReport`; ``report.pa`` is the human-readable PA
     report, ``report.to_json()`` the machine-readable artifact.  For
     sweeping many configurations prefer the batched paths
@@ -186,6 +216,8 @@ def simulate(compiled, hw: HardwareSpec = TPU_V5E, n_chips: int = 1,
     """
     if engine not in ("occupancy", "schedule", "both", "node"):
         raise ValueError(f"unknown engine mode {engine!r}")
+    if sampling is not None and engine != "node":
+        raise ValueError("sampling= requires engine='node'")
     if isinstance(compiled, str):
         text = compiled
         cost = mem = None
@@ -203,10 +235,17 @@ def simulate(compiled, hw: HardwareSpec = TPU_V5E, n_chips: int = 1,
     sched = (schedule_program(prog, hw, compute_dtype=compute_dtype,
                               costed=costed, detail=True)
              if engine in ("schedule", "both") else None)
-    node = (simulate_node(prog, hw, n_cores, topology=topology,
-                          partition=node_partition,
-                          compute_dtype=compute_dtype, costed=costed)
-            if engine == "node" else None)
+    node = sampled = None
+    if engine == "node":
+        if sampling is not None:
+            sampled = sampled_schedule_node(
+                prog, hw, n_cores, topology=topology,
+                partition=node_partition, config=sampling,
+                compute_dtype=compute_dtype, costed=costed)
+        else:
+            node = simulate_node(prog, hw, n_cores, topology=topology,
+                                 partition=node_partition,
+                                 compute_dtype=compute_dtype, costed=costed)
     rf = roofline_from_program(prog, hw, n_chips, model_flops_global,
                                compute_dtype)
     summary = {
@@ -223,4 +262,4 @@ def simulate(compiled, hw: HardwareSpec = TPU_V5E, n_chips: int = 1,
                                   engine_mode=engine, node=node),
                      xla_cost_analysis=cost, memory_analysis=mem,
                      schedule=sched, engine_mode=engine, program=prog,
-                     node=node)
+                     node=node, sampled=sampled)

@@ -26,15 +26,27 @@ class Stats:
     # ------------------------------------------------------------- sections
     @contextlib.contextmanager
     def section(self, name: str) -> Iterator[None]:
+        """Scope updates (and wall time) to ``name`` until exit.
+
+        Wall-time attribution matches :meth:`add`'s counter semantics:
+        an enclosing section's ``wall_s`` covers its nested sections
+        (its own dt spans them); a section re-entered recursively is
+        credited once, at the outermost exit (an inner exit would
+        otherwise double-count — its dt is inside the outer one); and
+        ``__global__`` accumulates the wall time of top-level sections.
+        """
         self._stack.append(name)
         t0 = time.perf_counter()
         try:
             yield
         finally:
             dt = time.perf_counter() - t0
-            self._sections[name]["wall_s"] += dt
-            self._sections[name]["entries"] += 1
             self._stack.pop()
+            if name not in self._stack:
+                self._sections[name]["wall_s"] += dt
+                self._sections[name]["entries"] += 1
+                if all(s == "__global__" for s in self._stack):
+                    self._sections["__global__"]["wall_s"] += dt
 
     def add(self, counter: str, value: float = 1.0) -> None:
         """Adds to EVERY active section (the full nesting stack).

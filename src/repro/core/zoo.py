@@ -33,6 +33,9 @@ kernels/HLO path and the multi-core node engine, one pipeline:
 """
 from __future__ import annotations
 
+import dataclasses
+import hashlib
+import json
 import time
 from dataclasses import dataclass, field
 from pathlib import Path
@@ -40,10 +43,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..configs import ARCHS, ZOO_SHAPES, reduced_config, zoo_phases_for
 from ..configs.base import ModelConfig, ShapeConfig
+from .cost import cost_program
 from .hlo import Program, parse_program
 from .hwspec import A64FX_CORE, HardwareSpec, NodeTopology
 from .node import compile_node, schedule_node, schedule_node_sweep
 from .roofline import roofline_from_program
+from .sample import SamplePlan, SamplingConfig, sample_program, \
+    sampled_node_sweep, sampled_schedule_node, unroll_program
 
 #: Core counts the default sweep estimates at: one core, one full CMG,
 #: the whole 4-CMG node (mirrors the kernel suite's node section).
@@ -58,6 +64,10 @@ ZOO_O3_WINDOWS = (16, 64, 256)
 ZOO_O3_MEM_WIDTHS = (1, 2)
 ZOO_O3_VPU_WIDTHS = (1, 2)
 ZOO_O3_QUEUE_DEPTHS = (16,)
+
+#: Bump to invalidate every on-disk HLO cache entry (routing/schema
+#: changes that alter what a cached trace means).
+HLO_CACHE_SCHEMA = 2
 
 # ----------------------------------------------------------------- tracing
 # (arch, param_dtype) -> (model, abstract params); shared across phases so
@@ -109,6 +119,34 @@ def _traced_model(arch: str, param_dtype: str):
     p_abs = pr.abstract(model.param_specs(), jnp.dtype(param_dtype))
     _MODEL_CACHE[key] = (cfg, model, p_abs)
     return _MODEL_CACHE[key]
+
+
+def hlo_cache_key(arch: str, phase: str, shape: ShapeConfig,
+                  param_dtype: str) -> str:
+    """Content hash of everything the cached HLO depends on: the FULL
+    reduced model config, the shape, the dtype, and ``HLO_CACHE_SCHEMA``.
+    A name-only key (the pre-schema-2 scheme) silently served stale HLO
+    when a registry config or zoo shape changed under the same name."""
+    cfg = zoo_config(arch)
+    payload = json.dumps({
+        "schema": HLO_CACHE_SCHEMA,
+        "config": dataclasses.asdict(cfg),
+        "shape": dataclasses.asdict(shape),
+        "phase": phase,
+        "param_dtype": param_dtype,
+    }, sort_keys=True, default=str)
+    return hashlib.sha256(payload.encode()).hexdigest()[:12]
+
+
+def hlo_cache_path(cache_dir: Path, arch: str, phase: str,
+                   shape: ShapeConfig, param_dtype: str) -> Path:
+    """Cache file for one (arch, phase) cell: human-readable prefix +
+    content hash, so a config/shape/schema change misses instead of
+    reading a stale trace."""
+    h = hlo_cache_key(arch, phase, shape, param_dtype)
+    return Path(cache_dir) / (
+        f"{arch}__{phase}_s{shape.seq_len}b{shape.global_batch}"
+        f"_{param_dtype}.{h}.hlo.txt")
 
 
 def _phase_hlo(arch: str, phase: str, shape: ShapeConfig,
@@ -167,9 +205,8 @@ def trace_phase(arch: str, phase: str,
     text = None
     cache_file = None
     if hlo_cache_dir is not None:
-        cache_file = Path(hlo_cache_dir) / (
-            f"{arch}__{phase}_s{shape.seq_len}b{shape.global_batch}"
-            f"_{param_dtype}.hlo.txt")
+        cache_file = hlo_cache_path(Path(hlo_cache_dir), arch, phase,
+                                    shape, param_dtype)
         if cache_file.exists():
             text = cache_file.read_text()
     if text is None:
@@ -180,6 +217,38 @@ def trace_phase(arch: str, phase: str,
     prog = parse_program(text)
     _PROGRAM_CACHE[key] = prog
     return prog
+
+
+def long_trace_repeats(arch: str, phase: str,
+                       decode_steps: int = 64) -> int:
+    """How many copies of the traced step the full-width/full-depth trace
+    concatenates: the full/reduced layer-count ratio for ``train`` and
+    ``prefill`` (the reduced trace collapses the stack to <= 4 layers),
+    ``decode_steps`` near-identical token steps for ``decode``."""
+    if phase == "decode":
+        return max(1, int(decode_steps))
+    full = ARCHS[arch].n_layers
+    reduced = zoo_config(arch).n_layers
+    return max(1, -(-full // max(reduced, 1)))      # ceil div
+
+
+def trace_long_phase(arch: str, phase: str,
+                     shape: Optional[ShapeConfig] = None,
+                     param_dtype: str = "float32",
+                     hlo_cache_dir: Optional[Path] = None,
+                     decode_steps: int = 64,
+                     repeats: Optional[int] = None) -> Tuple[Program, int]:
+    """The full-depth/multi-step trace of one zoo cell: the reduced trace
+    of :func:`trace_phase` unrolled ``repeats`` times
+    (:func:`~.sample.unroll_program` — deps shift per copy, copies chain
+    through zero-byte scheduling edges).  ~100x more op instances than
+    the reduced trace, which only the sampled estimator
+    (DESIGN.md §18) schedules inside a CI budget.  Returns
+    ``(program, repeats)``."""
+    step = trace_phase(arch, phase, shape, param_dtype, hlo_cache_dir)
+    r = repeats if repeats is not None else \
+        long_trace_repeats(arch, phase, decode_steps)
+    return unroll_program(step, r), r
 
 
 # ------------------------------------------------------------- rank utility
@@ -242,6 +311,10 @@ class PhaseEstimate:
     roofline_dominant: str           # compute | memory | collective
     roofline_fraction: float
     per_core: List[CoreCountEstimate] = field(default_factory=list)
+    # sampled-estimation metadata (None = every op scheduled); the long
+    # full-depth trace mode records its unroll factor in trace_repeats
+    sampling: Optional[Dict[str, float]] = None
+    trace_repeats: int = 1
 
     def at(self, n_cores: int) -> CoreCountEstimate:
         """The estimate at one swept core count (KeyError if not swept)."""
@@ -317,6 +390,8 @@ class ZooReport:
                     "roofline_dominant": pe.roofline_dominant,
                     "roofline_fraction": pe.roofline_fraction,
                     "node_speedup": pe.node_speedup,
+                    "sampling": pe.sampling,
+                    "trace_repeats": pe.trace_repeats,
                     "per_core": {
                         str(ce.n_cores): {
                             "t_est_us": ce.t_est_s * 1e6,
@@ -365,7 +440,9 @@ def estimate_program(prog: Program, hw: HardwareSpec = A64FX_CORE,
                      compute_dtype: str = "f32",
                      model_flops: float = 0.0,
                      o3_knobs=None,
-                     arch: str = "", phase: str = "") -> PhaseEstimate:
+                     arch: str = "", phase: str = "",
+                     sampling: Optional[SamplingConfig] = None
+                     ) -> PhaseEstimate:
     """Estimate one traced program across the core-count axis.
 
     The program is costed once (``compile_node`` memoizes the node form on
@@ -376,29 +453,67 @@ def estimate_program(prog: Program, hw: HardwareSpec = A64FX_CORE,
     its own exact contention fixpoint — and the best combo per count is
     recorded: the ``calibrate.sweep_o3`` machinery pointed at
     applications instead of microkernels (DESIGN.md §17).
+
+    ``sampling`` switches every schedule in the cell to the SimPoint-style
+    sampled path (``core.sample``, DESIGN.md §18): the program is sliced,
+    clustered ONCE, and only cluster representatives are scheduled at
+    each core count / knob combo — the mode that makes the long
+    full-depth traces (:func:`trace_long_phase`) affordable.
     """
     topo = topology or hw.topology or NodeTopology.degenerate(
         max(core_counts))
-    nc = compile_node(prog, hw, compute_dtype=compute_dtype)
     rf = roofline_from_program(prog, hw, 1, model_flops, compute_dtype)
+    plan: Optional[SamplePlan] = None
+    if sampling is not None:
+        costed = cost_program(prog, hw, compute_dtype=compute_dtype)
+        plan = sample_program(prog, hw, sampling, compute_dtype, costed)
+        n_costed = sum(1 for ot in costed if ot is not None)
+    else:
+        nc = compile_node(prog, hw, compute_dtype=compute_dtype)
+        n_costed = int(nc.costed_mask.sum())
     pe = PhaseEstimate(
         arch=arch, phase=phase, n_ops=len(prog.ops),
-        n_costed=int(nc.costed_mask.sum()),
+        n_costed=n_costed,
         flops=prog.flops, bytes_accessed=prog.bytes_accessed,
         roofline_dominant=rf.dominant,
         roofline_fraction=rf.roofline_fraction)
+    if plan is not None:
+        pe.sampling = {
+            "k": plan.k, "n_intervals": plan.n_intervals,
+            "interval_ops": plan.config.interval_ops,
+            "seed": plan.config.seed,
+            "frac_ops_scheduled": plan.frac_ops_scheduled,
+        }
     knob_ts = None
     if o3_knobs is not None:
-        knob_ts = schedule_node_sweep(nc, hw, o3_knobs, core_counts,
-                                      topology=topo, partition=partition)
+        if plan is not None:
+            knob_ts, _ = sampled_node_sweep(
+                prog, hw, o3_knobs, core_counts, topology=topo,
+                partition=partition, compute_dtype=compute_dtype,
+                plan=plan)
+        else:
+            knob_ts = schedule_node_sweep(nc, hw, o3_knobs, core_counts,
+                                          topology=topo,
+                                          partition=partition)
     for ki, k in enumerate(core_counts):
-        nr = schedule_node(nc, hw, k, topology=topo, partition=partition)
-        ce = CoreCountEstimate(
-            n_cores=k, t_est_s=nr.t_est,
-            t_zero_contention_s=nr.t_zero_contention,
-            parallel_efficiency=nr.parallel_efficiency,
-            bound_by=nr.schedule.bound_by,
-            shared_n_active=dict(nr.per_cmg[0].n_active))
+        if plan is not None:
+            sr = sampled_schedule_node(
+                prog, hw, k, topology=topo, partition=partition,
+                compute_dtype=compute_dtype, plan=plan)
+            ce = CoreCountEstimate(
+                n_cores=k, t_est_s=sr.t_est,
+                t_zero_contention_s=sr.t_zero_contention,
+                parallel_efficiency=sr.parallel_efficiency,
+                bound_by=sr.bound_by)
+        else:
+            nr = schedule_node(nc, hw, k, topology=topo,
+                               partition=partition)
+            ce = CoreCountEstimate(
+                n_cores=k, t_est_s=nr.t_est,
+                t_zero_contention_s=nr.t_zero_contention,
+                parallel_efficiency=nr.parallel_efficiency,
+                bound_by=nr.schedule.bound_by,
+                shared_n_active=dict(nr.per_cmg[0].n_active))
         if knob_ts is not None:
             ts = knob_ts[ki]
             best = int(ts.argmin())
@@ -433,13 +548,26 @@ def run_zoo(models: Optional[Sequence[str]] = None,
             clock_hz: float = DEFAULT_CLOCK_HZ,
             with_o3_grid: bool = True,
             hlo_cache_dir: Optional[Path] = None,
-            progress=None) -> ZooReport:
+            progress=None,
+            long_traces: bool = False,
+            decode_steps: int = 64,
+            sampling: Optional[SamplingConfig] = None) -> ZooReport:
     """Trace + estimate + rank the model zoo end to end.
 
     ``models`` defaults to every config in ``configs.registry.ARCHS``;
     ``phases`` defaults to each model's ``zoo_phases_for`` set.  Returns a
     :class:`ZooReport`; ``benchmarks/model_zoo.py`` wraps this with a
     wall-clock budget and writes ``BENCH_model_zoo.json``.
+
+    ``long_traces`` switches every cell to the full-depth/multi-step
+    trace (:func:`trace_long_phase`: the reduced step unrolled by the
+    full/reduced layer ratio, or ``decode_steps`` token steps) — ~100x
+    more op instances, affordable under a CI budget only with
+    ``sampling`` (a :class:`~.sample.SamplingConfig`; DESIGN.md §18).
+    ``sampling`` also works on the reduced traces alone.  A non-positive
+    ``sampling.interval_ops`` means *auto*: one interval per traced step
+    (the unrolled copies land on interval boundaries, so identical steps
+    collapse into one cluster).
     """
     t0 = time.perf_counter()
     names = list(models) if models is not None else sorted(ARCHS)
@@ -458,12 +586,26 @@ def run_zoo(models: Optional[Sequence[str]] = None,
         report.estimates[arch] = {}
         for phase in arch_phases:
             tp0 = time.perf_counter()
-            prog = trace_phase(arch, phase, param_dtype=param_dtype,
-                               hlo_cache_dir=hlo_cache_dir)
+            repeats = 1
+            if long_traces:
+                prog, repeats = trace_long_phase(
+                    arch, phase, param_dtype=param_dtype,
+                    hlo_cache_dir=hlo_cache_dir,
+                    decode_steps=decode_steps)
+            else:
+                prog = trace_phase(arch, phase, param_dtype=param_dtype,
+                                   hlo_cache_dir=hlo_cache_dir)
+            cell_sampling = sampling
+            if sampling is not None and sampling.interval_ops <= 0:
+                step_inst = sum(o.count for o in prog.ops) / repeats
+                cell_sampling = dataclasses.replace(
+                    sampling, interval_ops=max(step_inst, 1.0))
             pe = estimate_program(
                 prog, hw, core_counts, topo, partition, compute_dtype,
                 model_flops=phase_model_flops(cfg, ZOO_SHAPES[phase]),
-                o3_knobs=knobs, arch=arch, phase=phase)
+                o3_knobs=knobs, arch=arch, phase=phase,
+                sampling=cell_sampling)
+            pe.trace_repeats = repeats
             report.estimates[arch][phase] = pe
             if progress is not None:
                 progress(arch, phase, pe, time.perf_counter() - tp0)

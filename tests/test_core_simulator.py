@@ -2,6 +2,8 @@
 
 Includes hypothesis property tests on the simulator's invariants (the
 assignment's property-test requirement)."""
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -321,3 +323,37 @@ def test_stats_nested_sections_credit_enclosing():
             s.add("steps", 1)
     assert s.get("steps", "steady") == 8
     assert s.get("steps") == 8
+
+
+def test_stats_wall_time_matches_counter_semantics():
+    """section() wall-time attribution is consistent with add():
+    enclosing sections see nested wall time, recursive re-entry is
+    credited once (at the outermost exit), and __global__ accumulates
+    top-level wall time (regression — wall_s used to credit only the
+    exited name, double-counting recursion and never reaching
+    __global__)."""
+    s = Stats()
+    with s.section("outer"):
+        time.sleep(0.01)
+        with s.section("inner"):
+            time.sleep(0.01)
+    outer = s.get("wall_s", "outer")
+    inner = s.get("wall_s", "inner")
+    assert inner >= 0.01
+    assert outer >= inner + 0.01          # encloser spans nested wall
+    # __global__ sees exactly the top-level section's wall
+    assert s.get("wall_s") == outer
+    assert s.get("entries", "outer") == 1
+    assert s.get("entries", "inner") == 1
+
+    # recursive re-entry: credited once, at the outermost exit
+    r = Stats()
+    with r.section("loop"):
+        time.sleep(0.01)
+        with r.section("loop"):
+            time.sleep(0.01)
+    wall = r.get("wall_s", "loop")
+    assert wall >= 0.02                   # the outermost dt, once
+    assert wall < 0.2                     # not inner+outer double-counted
+    assert r.get("entries", "loop") == 1
+    assert r.get("wall_s") == wall

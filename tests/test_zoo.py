@@ -82,6 +82,57 @@ def test_trace_phase_memoized_and_disk_cached(tmp_path):
         trace_phase("chatglm3-6b", "warmup")
 
 
+def test_hlo_cache_key_content_hashed(tmp_path, monkeypatch):
+    """The disk cache is keyed by a content hash of (config, shape,
+    schema version), not the name alone: a config/shape/schema change
+    must miss instead of serving stale HLO (regression — the pre-schema-2
+    name-only scheme read whatever sat at the name)."""
+    import dataclasses
+
+    import repro.core.zoo as zoo
+    shape = ZOO_SHAPES["decode"]
+    p = zoo.hlo_cache_path(tmp_path, "chatglm3-6b", "decode", shape,
+                           "float32")
+    # deterministic, and sensitive to every key component
+    assert p == zoo.hlo_cache_path(tmp_path, "chatglm3-6b", "decode",
+                                   shape, "float32")
+    assert p != zoo.hlo_cache_path(tmp_path, "chatglm3-6b", "decode",
+                                   shape, "bfloat16")
+    bigger = dataclasses.replace(shape, global_batch=shape.global_batch * 2)
+    assert p != zoo.hlo_cache_path(tmp_path, "chatglm3-6b", "decode",
+                                   bigger, "float32")
+    monkeypatch.setattr(zoo, "HLO_CACHE_SCHEMA", zoo.HLO_CACHE_SCHEMA + 1)
+    assert p != zoo.hlo_cache_path(tmp_path, "chatglm3-6b", "decode",
+                                   shape, "float32")
+    monkeypatch.undo()
+
+    # cache busting end to end (no jax: the trace step is stubbed out).
+    # A stale name-only entry — the old scheme — is ignored; the hashed
+    # path is written and then served warm.
+    hlo = ('HloModule m, is_scheduled=true\n\n'
+           'ENTRY %main (p: f32[4096]) -> f32[4096] {\n'
+           '  %p = f32[4096]{0} parameter(0)\n'
+           '  %x = f32[4096]{0} exponential(f32[4096]{0} %p)\n'
+           '  ROOT %y = f32[4096]{0} add(f32[4096]{0} %x, f32[4096]{0} %p)\n'
+           '}\n')
+    monkeypatch.setattr(zoo, "_phase_hlo", lambda *a, **k: hlo)
+    stale = tmp_path / (f"chatglm3-6b__decode_s{shape.seq_len}"
+                        f"b{shape.global_batch}_float32.hlo.txt")
+    stale.write_text("STALE — must not be parsed")
+    clear_trace_caches()
+    prog = trace_phase("chatglm3-6b", "decode", hlo_cache_dir=tmp_path)
+    assert len(prog.ops) >= 1             # parsed the stub, not the stale
+    assert p.exists() and p.read_text() == hlo
+    # warm hit: a second process-fresh trace reads the hashed entry even
+    # when recompilation is impossible
+    monkeypatch.setattr(zoo, "_phase_hlo",
+                        lambda *a, **k: pytest.fail("cache miss"))
+    clear_trace_caches()
+    again = trace_phase("chatglm3-6b", "decode", hlo_cache_dir=tmp_path)
+    assert len(again.ops) == len(prog.ops)
+    clear_trace_caches()
+
+
 # -------------------------------------------- engine plumbing (no jax)
 def synthetic_program(n_ops: int = 48) -> Program:
     """A mixed compute/memory DAG: enough DRAM streaming that the node
