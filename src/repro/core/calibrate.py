@@ -378,7 +378,7 @@ def sweep_o3(table: AccuracyTable, hw: HardwareSpec,
     ``core.zoo.estimate_program`` is the same machinery pointed at
     whole-application programs (DESIGN.md §15)."""
     from .compiled import O3Knobs, compile_program, schedule_batch
-    from .node import compile_node, schedule_node_batch
+    from .node import compile_node, schedule_node_sweep
     if not table.programs:
         raise ValueError("sweep_o3 needs kernel_accuracy_table("
                          "keep_programs=True)")
@@ -390,17 +390,23 @@ def sweep_o3(table: AccuracyTable, hw: HardwareSpec,
     # per-op costs are independent of the O3 knobs: compile each program
     # ONCE per core count and run the shared array form across the grid
     diffs = np.empty((len(table.programs), len(core_counts), knobs.batch))
+    node_counts = sorted({k for k in core_counts if k > 1})
     for r, (prog, row) in enumerate(zip(table.programs, table.rows)):
+        # all node counts ride ONE fused [C*B] batch (schedule_node_sweep
+        # shares the compiled batch form and the contention fixpoint
+        # across the count axis); the 1-core rows keep the array engine
+        t_by_count = {}
+        if 1 in core_counts:
+            cp = compile_program(prog, hw, compute_dtype=compute_dtype)
+            t_by_count[1] = schedule_batch(cp, knobs, backend=backend)
+        if node_counts:
+            sw = schedule_node_sweep(
+                compile_node(prog, hw, compute_dtype=compute_dtype),
+                hw, knobs, node_counts, topology, partition="shard",
+                backend=backend)
+            t_by_count.update(zip(node_counts, sw))
         for ci, n_cores in enumerate(core_counts):
-            if n_cores == 1:
-                cp = compile_program(prog, hw, compute_dtype=compute_dtype)
-                t = schedule_batch(cp, knobs, backend=backend)
-            else:
-                nc = compile_node(prog, hw, compute_dtype=compute_dtype)
-                t = schedule_node_batch(nc, hw, knobs, n_cores, topology,
-                                        partition="shard",
-                                        backend=backend).t_est
-            t_us = t * 1e6
+            t_us = t_by_count[n_cores] * 1e6
             diffs[r, ci] = np.abs(t_us - row.measured_us) \
                 / row.measured_us * 100.0
     mean_abs = diffs.mean(axis=0)

@@ -89,6 +89,33 @@ class O3Knobs:
             depth[i, :] = max(1, qd)
         return cls(window, width, depth)
 
+    def unique(self) -> Tuple["O3Knobs", np.ndarray]:
+        """Deduplicated knob rows + the inverse map back to the full grid.
+
+        The ``max(1, ·)`` clamps in the constructors collapse distinct
+        grid points into identical combos (e.g. every window <= 1), and
+        batched sweeps would schedule those rows redundantly.  Returns
+        ``(uk, inv)`` with ``uk`` in FIRST-OCCURRENCE order (so argmin
+        tie-breaking downstream matches the undeduped grid) and
+        ``full_result = unique_result[inv]``.  Identity (``self``,
+        arange) when every row is already distinct.
+        """
+        b = self.batch
+        rows = np.concatenate(
+            [self.window[:, None], self.width, self.depth], axis=1)
+        _, first, inv = np.unique(rows, axis=0, return_index=True,
+                                  return_inverse=True)
+        inv = inv.reshape(-1)          # numpy 2.x keeps the extra axis
+        if len(first) == b:
+            return self, np.arange(b)
+        # np.unique sorts rows; restore first-occurrence order
+        order = np.argsort(first, kind="stable")
+        rank = np.empty_like(order)
+        rank[order] = np.arange(len(order))
+        sel = first[order]
+        return (O3Knobs(self.window[sel], self.width[sel], self.depth[sel]),
+                rank[inv])
+
 
 @dataclass
 class CompiledProgram:
@@ -306,6 +333,9 @@ def schedule_batch(cp: CompiledProgram, knobs: O3Knobs,
     compiled program in ONE sequential pass over the ops (the knob grid is
     the vector axis of every state update).  Returns ``t_est`` per combo,
     bit-identical to running the scalar kernel per combination."""
+    uk, inv = knobs.unique()
+    if uk is not knobs:               # clamped grids alias rows: schedule
+        return schedule_batch(cp, uk, backend)[inv]   # each combo once
     if backend == "jax":
         return schedule_batch_jax(cp, knobs)
     if backend != "numpy":

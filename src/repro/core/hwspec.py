@@ -34,7 +34,9 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from .memory import MemLevel
 
@@ -207,6 +209,143 @@ class HardwareSpec:
             )
         object.__setattr__(self, "_mh_cache", mh)
         return mh
+
+
+class SpecGrid:
+    """Structure-of-arrays over S :class:`HardwareSpec`\\ s — the spec
+    batch axis of the fused DSE sweeps (DESIGN.md §19).
+
+    A grid is *structurally uniform*: every spec shares the hierarchy
+    depth and level names, ``warm_caches``, the MXU tile shape and the
+    VPU-fallback threshold — everything that decides port assignment or
+    program structure — while every numeric rate (flops tables, level
+    capacities/bandwidths/latencies, per-opcode factors, ICI, startups,
+    topology parameters) varies freely per spec.  ``cost_program_batch``
+    evaluates those rates as ``[S]`` vectors per op; construction
+    validates uniformity and raises ``ValueError`` otherwise.
+
+    Grids compare by VALUE over ``(specs, topologies)`` — the compile
+    caches (``compile_node_grid``) key on that, so a rebuilt equal grid
+    hits and a 1-spec grid can never alias a plain single-spec entry
+    (different cache, different key type).
+    """
+
+    def __init__(self, specs: Sequence[HardwareSpec],
+                 topologies: Optional[Sequence[Optional[NodeTopology]]]
+                 = None):
+        specs = tuple(specs)
+        if not specs:
+            raise ValueError("empty spec grid")
+        if topologies is None:
+            topologies = tuple(sp.topology for sp in specs)
+        else:
+            topologies = tuple(topologies)
+            if len(topologies) != len(specs):
+                raise ValueError("topologies/specs length mismatch")
+        base = specs[0]
+        names = tuple(lv.name for lv in base.memory_hierarchy())
+        for sp in specs:
+            if tuple(lv.name for lv in sp.memory_hierarchy()) != names:
+                raise ValueError(f"{sp.name}: level structure differs "
+                                 f"from {base.name}")
+            if sp.warm_caches != base.warm_caches:
+                raise ValueError(f"{sp.name}: warm_caches differs")
+            if sp.mxu_tile != base.mxu_tile:
+                raise ValueError(f"{sp.name}: mxu_tile differs")
+            if sp.min_matmul_dim_for_mxu != base.min_matmul_dim_for_mxu:
+                raise ValueError(f"{sp.name}: min_matmul_dim_for_mxu "
+                                 "differs")
+        self.specs = specs
+        self.topologies = topologies
+        self.level_names = names
+        self.warm_caches = base.warm_caches
+        self.mxu_tile = base.mxu_tile
+        self.min_matmul_dim_for_mxu = base.min_matmul_dim_for_mxu
+        self.transcendental = np.array(
+            [sp.transcendental_factor for sp in specs])
+        self.ici_bw_per_link = np.array(
+            [sp.ici_bw_per_link for sp in specs])
+        self.collective_startup_us = np.array(
+            [sp.collective_startup_us for sp in specs])
+        self.op_startup_ns = np.array([sp.op_startup_ns for sp in specs])
+        self._flops_cache: Dict[Tuple[str, str], np.ndarray] = {}
+        self._factor_cache: Dict[Tuple[str, str], np.ndarray] = {}
+
+    @property
+    def S(self) -> int:
+        return len(self.specs)
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, SpecGrid)
+                and self.specs == other.specs
+                and self.topologies == other.topologies)
+
+    def __ne__(self, other) -> bool:
+        return not self.__eq__(other)
+
+    __hash__ = None
+
+    def topology_of(self, s: int) -> NodeTopology:
+        """Spec ``s``'s node topology (degenerate single-core fallback,
+        mirroring ``schedule_node``'s resolution)."""
+        return self.topologies[s] or NodeTopology.degenerate(1)
+
+    def hierarchies(self) -> List[Tuple[MemLevel, ...]]:
+        """Per-spec ordered hierarchies (for the batched router)."""
+        return [sp.memory_hierarchy() for sp in self.specs]
+
+    def matmul_flops(self, dtype: str) -> np.ndarray:
+        """[S] MXU peak FLOP/s at ``dtype`` (memoized per dtype)."""
+        key = ("mxu", dtype)
+        out = self._flops_cache.get(key)
+        if out is None:
+            out = self._flops_cache[key] = np.array(
+                [sp.matmul_flops(dtype) for sp in self.specs])
+        return out
+
+    def vector_flops(self, dtype: str) -> np.ndarray:
+        """[S] VPU peak FLOP/s at ``dtype`` (memoized per dtype)."""
+        key = ("vpu", dtype)
+        out = self._flops_cache.get(key)
+        if out is None:
+            out = self._flops_cache[key] = np.array(
+                [sp.vector_flops(dtype) for sp in self.specs])
+        return out
+
+    def trans_factor(self, opcode: str) -> np.ndarray:
+        """[S] per-opcode latency factor with each spec's
+        ``transcendental_factor`` as its own fallback (the scalar
+        ``trans_time`` lookup, vectorized)."""
+        key = ("t", opcode)
+        out = self._factor_cache.get(key)
+        if out is None:
+            out = self._factor_cache[key] = np.array(
+                [sp.opcode_factor.get(opcode, sp.transcendental_factor)
+                 for sp in self.specs])
+        return out
+
+    def vpu_extra_factor(self, opcode: str) -> np.ndarray:
+        """[S] extra flop-equivalents factor ``f - 1`` for non-trans
+        opcodes; specs without an entry contribute 0.0 — adding that 0.0
+        is a float no-op, so per-spec table presence may differ while the
+        scalar ``vpu_extra`` skip stays bit-reproduced."""
+        key = ("v", opcode)
+        out = self._factor_cache.get(key)
+        if out is None:
+            vals = [sp.opcode_factor.get(opcode) for sp in self.specs]
+            out = self._factor_cache[key] = np.array(
+                [0.0 if f is None else f - 1.0 for f in vals])
+        return out
+
+    def opclass_throughput_arr(self, opclass: str) -> np.ndarray:
+        """[S] OpClass throughput override (default 1.0)."""
+        key = ("o", opclass)
+        out = self._factor_cache.get(key)
+        if out is None:
+            out = self._factor_cache[key] = np.array(
+                [sp.opclass_throughput.get(opclass, 1.0)
+                 for sp in self.specs])
+        return out
 
 
 TPU_V5E = HardwareSpec(

@@ -134,39 +134,14 @@ def _charge(tr: MemTraffic, lv: MemLevel, rb: float, wb: float) -> None:
         tr.t_write += wb / lv.write_bw
 
 
-def route_program(prog: Program, levels: Sequence[MemLevel],
-                  compute_dtype: Optional[str] = None,
-                  warm_caches: bool = False) -> List[MemTraffic]:
-    """Route every op's traffic through the hierarchy.
-
-    Reuse distances are computed on the per-iteration op sequence: prefix
-    sums of per-instance write bytes, so an edge from op *j* to op *i* sees
-    the footprint written by ops *j..i-1* (including *j*'s own output —
-    an operand larger than a level can never be resident there).  Edges
-    that cross a collapsed loop body (count > 1) use the single-iteration
-    footprint, a deliberate under-estimate recorded in DESIGN.md §12.
-
-    Vectorized (DESIGN.md §13): one array pass over the CSR def-use edge
-    list instead of a per-op/per-edge Python loop — the residency lookup
-    becomes a ``searchsorted`` on the (cumulative-max) level capacities,
-    the read-budget clamp a prefix-sum formulation, the per-level byte
-    tallies ``np.add.at`` scatters.
-    """
-    if not levels:
-        raise ValueError("empty memory hierarchy")
+def _route_edges(prog: Program, compute_dtype: Optional[str]):
+    """Spec-independent routing inputs, computed once per program: the
+    effective (read, write) bytes per op, the budget-clamped CSR def-use
+    edge shares, and each edge's reuse distance.  None of these depend on
+    level capacities or bandwidths, so the spec-batched router
+    (:func:`route_program_batch`) shares them across the whole grid.
+    Returns ``(rb, wb, dst, e_eff, dist)``."""
     n = len(prog.ops)
-    if n == 0:
-        return []
-    L = len(levels)
-    # residency_level scans innermost-out and takes the first fit, so a
-    # (pathological) smaller-capacity outer level can never win: the
-    # running max reproduces first-fit exactly under searchsorted
-    caps = np.maximum.accumulate(
-        np.array([lv.capacity for lv in levels], dtype=np.float64))
-    read_bw = np.array([lv.read_bw for lv in levels], dtype=np.float64)
-    write_bw = np.array([lv.write_bw for lv in levels], dtype=np.float64)
-    lat = np.array([lv.latency_s for lv in levels], dtype=np.float64)
-
     scales = [_dtype_scale(o, compute_dtype) for o in prog.ops]
     rws = [_split_rw(o, scales[i]) for i, o in enumerate(prog.ops)]
     rb = np.array([r for r, _ in rws], dtype=np.float64)
@@ -174,13 +149,6 @@ def route_program(prog: Program, levels: Sequence[MemLevel],
     # foot[i] = effective bytes written by ops 0..i-1
     foot = np.zeros(n + 1, dtype=np.float64)
     np.cumsum(wb, out=foot[1:])
-
-    # cold-traffic level: warm working-set rule on cache machines,
-    # outermost (HBM/DRAM) on scratch-memory machines
-    if warm_caches:
-        cold = np.minimum(np.searchsorted(caps, rb + wb, side="left"), L - 1)
-    else:
-        cold = np.full(n, L - 1, dtype=np.intp)
 
     # CSR def-use edge list (consumer-major, edges in OpStat.deps order)
     srcs: List[int] = []
@@ -217,6 +185,51 @@ def route_program(prog: Program, levels: Sequence[MemLevel],
     e_eff[rb[dst] <= 0] = 0.0
 
     dist = foot[dst] - foot[src]
+    return rb, wb, dst, e_eff, dist
+
+
+def route_program(prog: Program, levels: Sequence[MemLevel],
+                  compute_dtype: Optional[str] = None,
+                  warm_caches: bool = False) -> List[MemTraffic]:
+    """Route every op's traffic through the hierarchy.
+
+    Reuse distances are computed on the per-iteration op sequence: prefix
+    sums of per-instance write bytes, so an edge from op *j* to op *i* sees
+    the footprint written by ops *j..i-1* (including *j*'s own output —
+    an operand larger than a level can never be resident there).  Edges
+    that cross a collapsed loop body (count > 1) use the single-iteration
+    footprint, a deliberate under-estimate recorded in DESIGN.md §12.
+
+    Vectorized (DESIGN.md §13): one array pass over the CSR def-use edge
+    list instead of a per-op/per-edge Python loop — the residency lookup
+    becomes a ``searchsorted`` on the (cumulative-max) level capacities,
+    the read-budget clamp a prefix-sum formulation, the per-level byte
+    tallies ``np.add.at`` scatters.
+    """
+    if not levels:
+        raise ValueError("empty memory hierarchy")
+    n = len(prog.ops)
+    if n == 0:
+        return []
+    L = len(levels)
+    # residency_level scans innermost-out and takes the first fit, so a
+    # (pathological) smaller-capacity outer level can never win: the
+    # running max reproduces first-fit exactly under searchsorted
+    caps = np.maximum.accumulate(
+        np.array([lv.capacity for lv in levels], dtype=np.float64))
+    read_bw = np.array([lv.read_bw for lv in levels], dtype=np.float64)
+    write_bw = np.array([lv.write_bw for lv in levels], dtype=np.float64)
+    lat = np.array([lv.latency_s for lv in levels], dtype=np.float64)
+
+    rb, wb, dst, e_eff, dist = _route_edges(prog, compute_dtype)
+
+    # cold-traffic level: warm working-set rule on cache machines,
+    # outermost (HBM/DRAM) on scratch-memory machines
+    if warm_caches:
+        cold = np.minimum(np.searchsorted(caps, rb + wb, side="left"), L - 1)
+    else:
+        cold = np.full(n, L - 1, dtype=np.intp)
+
     elvl = np.minimum(np.searchsorted(caps, dist, side="left"), L - 1)
 
     dep_read = np.bincount(dst, weights=e_eff,
@@ -253,6 +266,132 @@ def route_program(prog: Program, levels: Sequence[MemLevel],
             tr.write_by_level[names[cold[i]]] = float(wb[i])
         out.append(tr)
     return out
+
+
+# ------------------------------------------------- spec-batched routing
+@dataclass
+class BatchTraffic:
+    """Spec-batched routed traffic: ``[n_ops, S]`` times and
+    ``[n_ops, L, S]`` per-level bytes over a grid of S hierarchies
+    (DESIGN.md §19).  Column ``s`` is bit-identical to
+    :func:`route_program` under hierarchy ``s`` (the differential suite
+    pins it); bytes are per instance and dtype-normalized, like
+    :class:`MemTraffic`.
+    """
+    level_names: Tuple[str, ...]
+    t_read: np.ndarray           # [n, S]
+    t_write: np.ndarray          # [n, S]
+    latency: np.ndarray          # [n, S]
+    read_by_level: np.ndarray    # [n, L, S]
+    write_by_level: np.ndarray   # [n, L, S]
+
+    @property
+    def t_mem(self) -> np.ndarray:
+        """[n, S]; same add order as :meth:`MemTraffic.t_mem`."""
+        return self.t_read + self.t_write + self.latency
+
+
+def route_program_batch(prog: Program,
+                        levels_per_spec: Sequence[Sequence[MemLevel]],
+                        compute_dtype: Optional[str] = None,
+                        warm_caches: bool = False) -> BatchTraffic:
+    """Route every op through S hierarchies at once (the spec batch axis).
+
+    The spec-independent inputs — effective read/write bytes, the
+    budget-clamped def-use edge shares, reuse distances — are computed
+    once (:func:`_route_edges`); only the residency lookups, bandwidth
+    divisions and per-level tallies grow a trailing S axis.  The
+    ``searchsorted``-over-cummax residency trick becomes a broadcast
+    ``(caps < v).sum()`` count (identical for sorted capacities), and the
+    per-``dst`` time accumulations use ``np.add.at``, which adds in edge
+    order exactly like the scalar path's ``np.bincount`` — so every
+    column is bit-identical to a :func:`route_program` call with that
+    spec's levels.  All hierarchies must share depth and level names
+    (structural uniformity; numeric parameters are free to vary).
+    """
+    if not levels_per_spec:
+        raise ValueError("empty spec grid")
+    names = tuple(lv.name for lv in levels_per_spec[0])
+    L = len(names)
+    if L == 0:
+        raise ValueError("empty memory hierarchy")
+    for levels in levels_per_spec:
+        if tuple(lv.name for lv in levels) != names:
+            raise ValueError(
+                "spec grid hierarchies must share level structure: "
+                f"{tuple(lv.name for lv in levels)} != {names}")
+    S = len(levels_per_spec)
+    n = len(prog.ops)
+    if n == 0:
+        z2 = np.zeros((0, S))
+        return BatchTraffic(names, z2, z2.copy(), z2.copy(),
+                            np.zeros((0, L, S)), np.zeros((0, L, S)))
+    # [S, L] level parameter matrices (capacities cummax'd per spec row)
+    caps = np.maximum.accumulate(np.array(
+        [[lv.capacity for lv in levels] for levels in levels_per_spec],
+        dtype=np.float64), axis=1)
+    read_bw = np.array([[lv.read_bw for lv in levels]
+                        for levels in levels_per_spec], dtype=np.float64)
+    write_bw = np.array([[lv.write_bw for lv in levels]
+                         for levels in levels_per_spec], dtype=np.float64)
+    lat = np.array([[lv.latency_s for lv in levels]
+                    for levels in levels_per_spec], dtype=np.float64)
+    s_idx = np.arange(S)[None, :]
+
+    rb, wb, dst, e_eff, dist = _route_edges(prog, compute_dtype)
+    E = len(dst)
+
+    # residency: count of levels whose (cummax) capacity is < v ==
+    # searchsorted(caps, v, side="left") per spec column
+    if warm_caches:
+        cold = np.minimum(
+            (caps[None, :, :] < (rb + wb)[:, None, None]).sum(axis=2),
+            L - 1)                                   # [n, S]
+    else:
+        cold = np.full((n, S), L - 1, dtype=np.intp)
+    elvl = np.minimum(
+        (caps[None, :, :] < dist[:, None, None]).sum(axis=2), L - 1)
+
+    t_read = np.zeros((n, S))
+    if E:
+        rbw_e = read_bw[s_idx, elvl]                 # [E, S]
+        np.add.at(t_read, dst, e_eff[:, None] / rbw_e)
+    dep_read = np.bincount(dst, weights=e_eff,
+                           minlength=n).astype(np.float64)
+    leftover = np.clip(rb - dep_read, 0.0, None)
+    has_cold_read = leftover > 0
+    t_read += np.where(has_cold_read[:, None],
+                       leftover[:, None] / read_bw[s_idx, cold], 0.0)
+    t_write = np.where(wb[:, None] > 0,
+                       wb[:, None] / write_bw[s_idx, cold], 0.0)
+
+    # deepest level touched (latency charged there once per op)
+    deepest = np.where(wb[:, None] > 0, cold, 0)
+    live = e_eff > 0
+    if live.any():
+        np.maximum.at(deepest, dst[live], elvl[live])
+    deepest = np.where(has_cold_read[:, None],
+                       np.maximum(deepest, cold), deepest)
+    latency = lat[s_idx, deepest]
+
+    # per-(op, level, spec) byte tallies (flat-index scatters: the level
+    # index varies per spec column, so the scatter target does too)
+    rbl = np.zeros((n, L, S))
+    flat_s = np.arange(S)[None, :]
+    if live.any():
+        fl = (dst[live][:, None] * L + elvl[live]) * S + flat_s
+        np.add.at(rbl.reshape(-1), fl, e_eff[live][:, None])
+    rows = np.nonzero(has_cold_read)[0]
+    if len(rows):
+        fl = (rows[:, None] * L + cold[rows]) * S + flat_s
+        np.add.at(rbl.reshape(-1), fl, leftover[rows][:, None])
+    wbl = np.zeros((n, L, S))
+    rows = np.nonzero(wb > 0)[0]
+    if len(rows):
+        fl = (rows[:, None] * L + cold[rows]) * S + flat_s
+        np.add.at(wbl.reshape(-1), fl, wb[rows][:, None])
+
+    return BatchTraffic(names, t_read, t_write, latency, rbl, wbl)
 
 
 def aggregate_traffic(traffic: Sequence[Optional[MemTraffic]],

@@ -41,9 +41,9 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .compiled import PORTS, CompiledProgram, O3Knobs, compile_program
-from .cost import OpTime, cost_program
+from .cost import BatchCosted, OpTime, cost_program, cost_program_batch
 from .hlo import Program
-from .hwspec import HardwareSpec, NodeTopology
+from .hwspec import HardwareSpec, NodeTopology, SpecGrid
 from .schedule import ScheduleResult
 
 _NODE_CACHE_SIZE = 8
@@ -748,11 +748,27 @@ def compile_node_batch(nc: NodeCompiled, hw: HardwareSpec, n_cores: int,
                        ) -> NodeCompiledBatch:
     """Resolve a partition of ``nc`` into the batched pass form.  In
     shard mode the structure is core-count independent (one stream, no
-    ring), so one form serves a whole core-count sweep."""
+    ring), so one form serves a whole core-count sweep.
+
+    Memoized on the ``NodeCompiled`` keyed by ``(topo, partition,
+    n_cores)`` — with the core count dropped for shard forms, whose
+    structure does not depend on it.  The key sees the resolved
+    topology VALUE, so two sweeps over equal topologies share one form
+    while a spec-grid sweep with per-spec topologies can never alias
+    another grid's entry.  An explicit ``core_of`` bypasses the cache
+    (the key cannot see the array)."""
     topo = topology or hw.topology or NodeTopology.degenerate(n_cores)
     if n_cores < 1 or n_cores > max(topo.n_cores, 1):
         raise ValueError(f"n_cores={n_cores} outside topology "
                          f"{topo.name} (max {topo.n_cores})")
+    cache = None
+    if core_of is None:
+        key = (topo, partition,
+               None if partition == "shard" else n_cores)
+        cache = nc.__dict__.setdefault("_batch_cache", [])
+        for ck, cnb in cache:
+            if ck == key:
+                return cnb
     sched_core_of, sched_cmgs, shard, _scale, ring_lat, _cores = \
         _resolve_partition(nc, topo, n_cores, partition, core_of)
     n = nc.n
@@ -796,7 +812,7 @@ def compile_node_batch(nc: NodeCompiled, hw: HardwareSpec, n_cores: int,
                 home[i] = mycmg
         if not edge_extra.any():
             edge_extra = None
-    return NodeCompiledBatch(
+    nb = NodeCompiledBatch(
         nc=nc, topo=topo, partition=partition, shard=shard,
         ring_lat=ring_lat, sched_core_of=sched_core_of, core_of_l=core_l,
         cmg_of_stream=list(sched_cmgs), n_streams=S,
@@ -804,6 +820,11 @@ def compile_node_batch(nc: NodeCompiled, hw: HardwareSpec, n_cores: int,
         core_ops=np.asarray(core_ops, dtype=np.int64),
         cp_counts=np.asarray(cp_counts, dtype=np.int64),
         edge_extra=edge_extra)
+    if cache is not None:
+        cache.append((key, nb))
+        if len(cache) > _NODE_CACHE_SIZE:
+            cache.pop(0)
+    return nb
 
 
 def _node_pass_batch(nb: NodeCompiledBatch, durs_cols: np.ndarray,
@@ -1014,29 +1035,46 @@ class NodeBatchResult:
     t_est: np.ndarray
     t_zero_contention: np.ndarray
     iterations: np.ndarray
+    # passes actually run when knob dedup collapsed the grid (the
+    # expanded ``iterations`` would overcount the bench's accounting)
+    scheduled_passes: Optional[int] = None
 
     @property
     def total_scheduled_ops(self) -> int:
         """Op-instances actually scheduled: every fixpoint pass of every
         element is a full in-order schedule of the program (the bench's
         throughput accounting)."""
+        if self.scheduled_passes is not None:
+            return self.scheduled_passes
         return int(self.iterations.sum())
 
 
-def _batch_context(nb: NodeCompiledBatch, n_cores: int) -> dict:
-    """Fixpoint-state template for one core count on ``nb``.  Everything
-    but ``n_active`` is read-only and shared across batch elements; use
-    :func:`_clone_context` for each element's own state machine."""
+def _batch_context(nb: NodeCompiledBatch, n_cores: int,
+                   nc: Optional[NodeCompiled] = None,
+                   topo: Optional[NodeTopology] = None,
+                   durs0: Optional[np.ndarray] = None) -> dict:
+    """Fixpoint-state template for one (core count, spec) cell on ``nb``.
+    Everything but ``n_active`` is read-only and shared across batch
+    elements; use :func:`_clone_context` for each element's own state
+    machine.  ``nc``/``topo``/``durs0`` override the batch form's own
+    cost view for the spec-batched sweeps (DESIGN.md §19): the pass
+    structure (streams, CSR edges, pipe ids) stays ``nb``'s, while the
+    contention math and uncontended durations come from the per-spec
+    view."""
+    nc = nb.nc if nc is None else nc
+    topo = nb.topo if topo is None else topo
     cores = np.arange(n_cores, dtype=np.int64)
-    has_caps = any(nm in nb.topo.shared_read_bw
-                   or nm in nb.topo.shared_write_bw
-                   for nm in nb.nc.level_names)
+    has_caps = any(nm in topo.shared_read_bw
+                   or nm in topo.shared_write_bw
+                   for nm in nc.level_names)
     n_active, active_per_dom = _work_domains(
-        nb.nc, n_cores, nb.shard, nb.sched_core_of, cores)
+        nc, n_cores, nb.shard, nb.sched_core_of, cores)
     return {"n_cores": n_cores, "cores": cores,
             "scale": (1.0 / n_cores) if nb.shard else 1.0,
             "contended": has_caps and n_cores > 1,
-            "n_active": n_active, "active_per_dom": active_per_dom}
+            "n_active": n_active, "active_per_dom": active_per_dom,
+            "nc": nc, "topo": topo,
+            "durs0": nc.cp.durations if durs0 is None else durs0}
 
 
 def _clone_context(tmpl: dict) -> dict:
@@ -1052,11 +1090,11 @@ def _fixpoint_batch(nb: NodeCompiledBatch, contexts: List[dict],
     machine (replaying the scalar ``schedule_node`` trajectory exactly —
     same damping, same stop rules), elements drop out of the pass as
     they converge, and each pass schedules only the still-active
-    columns."""
-    nc = nb.nc
-    cp = nc.cp
+    columns.  Each context may carry its own cost view (``nc``/``topo``/
+    ``durs0``, see :func:`_batch_context`), which is how the spec axis
+    fuses with the knob axis."""
     M = knobs.batch
-    n = nc.n
+    n = nb.nc.n
     t_est = np.zeros(M)
     t_zero = np.zeros(M)
     iters = np.zeros(M, dtype=np.int64)
@@ -1078,18 +1116,19 @@ def _fixpoint_batch(nb: NodeCompiledBatch, contexts: List[dict],
         active = ~done
         for m in np.nonzero(active & stale)[0]:
             ctx = contexts[m]
+            nc_m = ctx["nc"]
             uncontended = all(float(a.max(initial=1.0)) <= 1.0
                               for a in ctx["n_active"])
             if uncontended and ctx["scale"] == 1.0:
                 # exact path, same as the scalar engine's
-                durs_cols[:, m] = cp.durations
+                durs_cols[:, m] = ctx["durs0"]
             else:
-                inv_r, inv_w = _eff_inv(nc, nb.topo, ctx["cores"],
+                inv_r, inv_w = _eff_inv(nc_m, ctx["topo"], ctx["cores"],
                                         ctx["n_active"])
                 row, row_w = (inv_r[0], inv_w[0]) if nb.shard else \
                     (inv_r[nb.sched_core_of], inv_w[nb.sched_core_of])
                 durs_cols[:, m] = _contended_durs_arr(
-                    nc, row, row_w, ctx["scale"])
+                    nc_m, row, row_w, ctx["scale"])
             stale[m] = False
         idx = np.nonzero(active)[0]
         if compact:
@@ -1109,7 +1148,7 @@ def _fixpoint_batch(nb: NodeCompiledBatch, contexts: List[dict],
             ctx = contexts[m]
             damp = 0.5 if iters[m] > 1 else 1.0
             ctx["n_active"], delta = _update_active(
-                nc, nb.topo, ctx["cores"], ctx["n_active"],
+                ctx["nc"], ctx["topo"], ctx["cores"], ctx["n_active"],
                 nb.sched_core_of, nb.shard, ctx["scale"],
                 ctx["n_cores"], float(t_est[m]), ctx["active_per_dom"],
                 damp)
@@ -1133,11 +1172,18 @@ def schedule_node_batch(nc: NodeCompiled, hw: HardwareSpec, knobs,
     combos advancing in lockstep through the vectorized pass.  Each
     element is bit-identical to ``schedule_node`` under a spec carrying
     the same knobs (``backend="jax"`` trades bit-exactness for a fused
-    ``lax.scan``)."""
+    ``lax.scan``).  Duplicate knob rows (clamp-collapsed grid points)
+    are scheduled once and expanded back to the full grid."""
+    uk, inv = knobs.unique()
     nb = compile_node_batch(nc, hw, n_cores, topology, partition, core_of)
     tmpl = _batch_context(nb, n_cores)
-    contexts = [_clone_context(tmpl) for _ in range(knobs.batch)]
-    return _fixpoint_batch(nb, contexts, knobs, max_iters, tol, backend)
+    contexts = [_clone_context(tmpl) for _ in range(uk.batch)]
+    res = _fixpoint_batch(nb, contexts, uk, max_iters, tol, backend)
+    if uk is knobs:
+        return res
+    return NodeBatchResult(res.t_est[inv], res.t_zero_contention[inv],
+                           res.iterations[inv],
+                           scheduled_passes=res.total_scheduled_ops)
 
 
 def schedule_node_sweep(nc: NodeCompiled, hw: HardwareSpec, knobs,
@@ -1151,24 +1197,173 @@ def schedule_node_sweep(nc: NodeCompiled, hw: HardwareSpec, knobs,
     batched pass; op partitions fall back to one batch per count (their
     stream structure depends on the count)."""
     core_counts = list(core_counts)
-    B = knobs.batch
     if partition == "shard":
+        uk, inv = knobs.unique()       # dedup BEFORE tiling across counts
+        B = uk.batch
         nb = compile_node_batch(nc, hw, max(core_counts), topology,
                                 partition)
-        tiled = O3Knobs(window=np.tile(knobs.window, len(core_counts)),
-                        width=np.tile(knobs.width, (len(core_counts), 1)),
-                        depth=np.tile(knobs.depth, (len(core_counts), 1)))
+        tiled = O3Knobs(window=np.tile(uk.window, len(core_counts)),
+                        width=np.tile(uk.width, (len(core_counts), 1)),
+                        depth=np.tile(uk.depth, (len(core_counts), 1)))
         tmpls = {k: _batch_context(nb, k) for k in core_counts}
         contexts = [_clone_context(tmpls[k])
                     for k in core_counts for _ in range(B)]
         res = _fixpoint_batch(nb, contexts, tiled, max_iters, tol,
                               backend)
-        return res.t_est.reshape(len(core_counts), B)
+        return res.t_est.reshape(len(core_counts), B)[:, inv]
     rows = [schedule_node_batch(nc, hw, knobs, k, topology, partition,
                                 max_iters=max_iters, tol=tol,
                                 backend=backend).t_est
             for k in core_counts]
     return np.stack(rows)
+
+
+# ----------------------------------------------------- spec-grid engine
+_GRID_CACHE_SIZE = 4
+
+
+@dataclass
+class NodeGridCompiled:
+    """One program compiled against a whole :class:`~.hwspec.SpecGrid`
+    (DESIGN.md §19): the shared structural ``CompiledProgram`` (CSR
+    def-use edges, port ids — spec-independent by the grid's uniformity
+    contract), the spec-batched cost decomposition, per-spec
+    ``NodeCompiled`` views into its columns, and the ``[n, S]``
+    uncontended duration matrix.  ``schedule_spec_sweep`` fuses the S
+    axis of one of these with the core-count and knob axes into a single
+    batched fixpoint run."""
+    grid: SpecGrid
+    bc: BatchCosted
+    cp: CompiledProgram           # structural form (spec-0 cost columns)
+    views: List[NodeCompiled]     # per-spec cost views sharing ``cp``
+    durations0: np.ndarray        # [n, S] uncontended (single-core) durs
+
+
+def compile_node_grid(prog: Program, grid: SpecGrid,
+                      links_per_collective: int = 2,
+                      compute_dtype: Optional[str] = None
+                      ) -> NodeGridCompiled:
+    """Compile (and memoize on the Program) the spec-grid node form.
+
+    One ``cost_program_batch`` pass covers every spec; the structural
+    compile runs once, seeded with spec 0's cost column via the
+    ``costed=`` bypass — so a grid compile never reads or writes the
+    single-spec ``compile_program``/``compile_node`` caches (it cannot
+    alias them; the grid cache is keyed by ``SpecGrid`` VALUE, a
+    distinct key type).  Column ``s`` of every per-spec view is
+    bit-identical to ``compile_node(prog, grid.specs[s])``'s arrays
+    (pinned by the differential suite)."""
+    cache = prog.__dict__.setdefault("_node_grid_cache", [])
+    for cgrid, cdt, clk, cngc in cache:
+        if cdt == compute_dtype and clk == links_per_collective \
+                and cgrid == grid:
+            return cngc
+    bc = cost_program_batch(prog, grid, links_per_collective,
+                            compute_dtype)
+    n = bc.n
+    costed0: List[Optional[OpTime]] = []
+    for i, o in enumerate(prog.ops):
+        if bc.port[i] is None:
+            costed0.append(None)
+        else:
+            costed0.append(OpTime(o, float(bc.t_compute[i, 0]),
+                                  float(bc.t_mem[i, 0]),
+                                  float(bc.t_ici[i, 0]), bc.port[i]))
+    cp = compile_program(prog, grid.specs[0], links_per_collective,
+                         compute_dtype, costed=costed0)
+    # (max(t_c, t_m, t_i) + startup) * count, the compile_program rule,
+    # vectorized over the spec axis; uncharged ops stay zero-duration
+    startup_s = np.array([sp.op_startup_ns for sp in grid.specs]) * 1e-9
+    durations0 = (bc.t_op() + startup_s[None, :]) * bc.count[:, None]
+    costed_mask = cp.port_id >= 0
+    durations0[~costed_mask] = 0.0
+    views: List[NodeCompiled] = []
+    for s, sp in enumerate(grid.specs):
+        levels = sp.memory_hierarchy()
+        views.append(NodeCompiled(
+            cp=cp, n=n,
+            t_comp=np.ascontiguousarray(bc.t_compute[:, s]),
+            t_ici=np.ascontiguousarray(bc.t_ici[:, s]),
+            lat=np.ascontiguousarray(bc.latency[:, s]),
+            count=bc.count,
+            rd=np.ascontiguousarray(bc.rd[:, :, s]),
+            wr=np.ascontiguousarray(bc.wr[:, :, s]),
+            level_names=grid.level_names,
+            core_read_bw=np.array([lv.read_bw for lv in levels]),
+            core_write_bw=np.array([lv.write_bw for lv in levels]),
+            shared_by=np.array([max(1, lv.shared_by) for lv in levels],
+                               dtype=np.int64),
+            startup=sp.op_startup_ns * 1e-9,
+            costed_mask=costed_mask))
+    ngc = NodeGridCompiled(grid=grid, bc=bc, cp=cp, views=views,
+                           durations0=durations0)
+    cache.append((grid, compute_dtype, links_per_collective, ngc))
+    if len(cache) > _GRID_CACHE_SIZE:
+        cache.pop(0)
+    return ngc
+
+
+def schedule_spec_sweep(ngc: NodeGridCompiled,
+                        knobs: Optional[O3Knobs] = None,
+                        core_counts=None, max_iters: int = 8,
+                        tol: float = 1e-2,
+                        backend: str = "numpy") -> np.ndarray:
+    """Fused spec × core-count × knob sweep: ``t_est [S, C, B]``.
+
+    Shard partition only (the DSE mode: every core runs the stream at
+    ``1/n_cores`` work) — the pass structure is then one stream with no
+    ring, shared by every spec, so the whole grid runs as a single
+    ``S*C*B``-element batched contention fixpoint with each element's
+    per-spec bandwidths/topology threaded through its own context.
+    Every element is bit-identical to the per-spec scalar pipeline
+    (``compile_node`` + ``schedule_node_batch``).
+
+    ``core_counts``: ``None`` — each spec at its full topology core
+    count (``C=1``); a sequence of ints — one shared count axis; a
+    length-S sequence of per-spec sequences (all length C) — e.g. DSE
+    grids where the core budget varies per candidate.  ``knobs``
+    defaults to spec 0's O3 resources; duplicate rows are scheduled
+    once."""
+    grid = ngc.grid
+    S = grid.S
+    if knobs is None:
+        knobs = O3Knobs.single(grid.specs[0])
+    uk, inv = knobs.unique()
+    B = uk.batch
+    topos = [grid.topology_of(s) for s in range(S)]
+    if core_counts is None:
+        counts = [[t.n_cores] for t in topos]
+    else:
+        core_counts = list(core_counts)
+        if core_counts and np.ndim(core_counts[0]) > 0:
+            counts = [list(c) for c in core_counts]
+            if len(counts) != S:
+                raise ValueError("per-spec core_counts must have one "
+                                 f"row per spec ({len(counts)} != {S})")
+        else:
+            counts = [list(core_counts)] * S
+    C = len(counts[0])
+    if any(len(c) != C for c in counts):
+        raise ValueError("ragged core_counts (the sweep is [S, C, B])")
+    # one shard structural form serves every (spec, count) cell
+    nb = compile_node_batch(ngc.views[0], grid.specs[0], 1, topos[0],
+                            "shard")
+    contexts: List[dict] = []
+    for s in range(S):
+        for k in counts[s]:
+            if k < 1 or k > max(topos[s].n_cores, 1):
+                raise ValueError(f"n_cores={k} outside topology "
+                                 f"{topos[s].name} "
+                                 f"(max {topos[s].n_cores})")
+            tmpl = _batch_context(nb, int(k), nc=ngc.views[s],
+                                  topo=topos[s],
+                                  durs0=ngc.durations0[:, s])
+            contexts.extend(_clone_context(tmpl) for _ in range(B))
+    tiled = O3Knobs(window=np.tile(uk.window, S * C),
+                    width=np.tile(uk.width, (S * C, 1)),
+                    depth=np.tile(uk.depth, (S * C, 1)))
+    res = _fixpoint_batch(nb, contexts, tiled, max_iters, tol, backend)
+    return res.t_est.reshape(S, C, B)[:, :, inv]
 
 
 def simulate_node(prog: Program, hw: HardwareSpec, n_cores: int,

@@ -528,6 +528,28 @@ def estimate_program(prog: Program, hw: HardwareSpec = A64FX_CORE,
     return pe
 
 
+def zoo_workloads(models: Sequence[str],
+                  phases: Sequence[str]) -> List[Tuple[str, str]]:
+    """Validated ``(arch, phase)`` cells for the DSE sweep (``core.dse``):
+    the cross product of ``models`` and ``phases``, checked against the
+    registry and each architecture's supported phases — a typo fails
+    here, not 64 specs into a sweep."""
+    out: List[Tuple[str, str]] = []
+    for m in models:
+        if m not in ARCHS:
+            raise ValueError(f"unknown arch {m!r}; known: {sorted(ARCHS)}")
+        supported = zoo_phases_for(ARCHS[m])
+        for ph in phases:
+            if ph not in ZOO_SHAPES:
+                raise ValueError(f"unknown phase {ph!r}; "
+                                 f"known: {sorted(ZOO_SHAPES)}")
+            if ph in supported:
+                out.append((m, ph))
+    if not out:
+        raise ValueError("no (arch, phase) cells survived filtering")
+    return out
+
+
 def zoo_o3_knobs(hw: HardwareSpec):
     """The zoo's compact batched knob grid (12 combos around ``hw``)."""
     from .calibrate import default_o3_knobs
