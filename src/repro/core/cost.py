@@ -65,9 +65,33 @@ def collective_factor(kind: str, g: int) -> float:
     return 1.0
 
 
+def collective_links(kind: str, links: int) -> int:
+    """Links a collective can drive concurrently: ring algorithms stream
+    both ring directions (``links``, conventionally 2), but a
+    collective-permute is ONE unidirectional send and gets no multi-link
+    credit.  The single place this distinction lives — ``cost_op``,
+    ``cost_program_batch``, the cluster engine and
+    ``parallel.collectives.CollectiveCost`` all divide by it."""
+    return 1 if kind == "collective-permute" else links
+
+
+def collective_steps(kind: str, g: int) -> int:
+    """Serial ring steps of a collective (the latency multiplier): an
+    all-reduce is reduce-scatter + all-gather (2(g-1) steps), the
+    single-phase collectives take g-1, a permute is one hop."""
+    if g <= 1:
+        return 0
+    if kind == "all-reduce":
+        return 2 * (g - 1)
+    if kind == "collective-permute":
+        return 1
+    return g - 1
+
+
 def cost_op(o: OpStat, hw: HardwareSpec, ici_bw: float,
             compute_dtype: Optional[str] = None,
-            traffic: Optional[MemTraffic] = None) -> Optional[OpTime]:
+            traffic: Optional[MemTraffic] = None,
+            links_per_collective: int = 2) -> Optional[OpTime]:
     """Per-op port assignment + per-instance times.  ``traffic`` is the
     hierarchy-routed memory traffic from ``cost_program``; when absent the
     op is routed standalone (working-set rule only).  Returns None for ops
@@ -136,8 +160,11 @@ def cost_op(o: OpStat, hw: HardwareSpec, ici_bw: float,
         # payload over a zero-bandwidth link is cleanly infeasible: inf,
         # never a ZeroDivisionError.
         moved = f * payload
+        links = collective_links(o.opcode, links_per_collective)
+        bw = ici_bw if links == links_per_collective \
+            else links * hw.ici_bw_per_link
         if moved > 0.0:
-            t_i = (moved / ici_bw if ici_bw > 0.0 else math.inf) \
+            t_i = (moved / bw if bw > 0.0 else math.inf) \
                 + hw.collective_startup_us * 1e-6
         else:
             t_i = hw.collective_startup_us * 1e-6
@@ -163,7 +190,8 @@ def cost_program(prog: Program, hw: HardwareSpec,
     ici_bw = links_per_collective * hw.ici_bw_per_link
     traffic = route_program(prog, hw.memory_hierarchy(), compute_dtype,
                             warm_caches=hw.warm_caches)
-    return [cost_op(o, hw, ici_bw, compute_dtype, traffic=tr)
+    return [cost_op(o, hw, ici_bw, compute_dtype, traffic=tr,
+                    links_per_collective=links_per_collective)
             for o, tr in zip(prog.ops, traffic)]
 
 
@@ -291,9 +319,12 @@ def cost_program_batch(prog: Program, grid: SpecGrid,
             payload = (0.5 * o.comm_bytes
                        if denorm and o.dtype == "f32" else o.comm_bytes)
             moved = f * payload
+            links = collective_links(o.opcode, links_per_collective)
+            bw = ici_bw if links == links_per_collective \
+                else links * grid.ici_bw_per_link
             if moved > 0.0:
                 with np.errstate(divide="ignore"):
-                    t_ici[i] = np.where(ici_bw > 0.0, moved / ici_bw,
+                    t_ici[i] = np.where(bw > 0.0, moved / bw,
                                         np.inf) + coll_start
             else:
                 t_ici[i] = coll_start

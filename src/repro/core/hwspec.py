@@ -89,6 +89,67 @@ class NodeTopology:
 
 
 @dataclass(frozen=True)
+class ClusterTopology:
+    """Inter-node interconnect for the multi-node cluster engine
+    (``core.cluster``, DESIGN.md §20) — the TofuD-style tier above
+    :class:`NodeTopology`, shaped like a ``MemLevel`` with ``shared_by``
+    semantics: per-link bandwidth, per-hop latency from node-mesh
+    coordinates, and a per-node injection aggregate
+    (``links_per_node * link_bw``) that concurrently-active collective
+    streams share through the same ``effective_bandwidth`` fixpoint the
+    node engine uses for L2/HBM2 domains.
+
+    Nodes sit on a ``mesh_shape`` torus (TofuD is a 6-D torus; three
+    logical dimensions capture its routing distances at this altitude).
+    Node ids map to coordinates row-major (last dimension fastest); a hop
+    between adjacent coordinates costs ``hop_latency_s`` and every hop a
+    flow crosses consumes one link's worth of capacity, so a g-member
+    ring whose neighbours sit h hops apart sees ``link_bw / h`` per
+    direction.
+    """
+    name: str
+    mesh_shape: Tuple[int, ...]
+    link_bw: float                       # bytes/s per link per direction
+    links_per_node: int = 6              # TofuD: 6 TNIs (RDMA engines)
+    hop_latency_s: float = 100e-9        # per switch-to-switch hop
+    collective_startup_us: float = 0.54  # software put latency per step 0
+    torus: bool = True                   # wraparound links on every dim
+
+    @property
+    def n_nodes(self) -> int:
+        n = 1
+        for d in self.mesh_shape:
+            n *= d
+        return n
+
+    @classmethod
+    def tofu_d(cls, n_nodes: int) -> "ClusterTopology":
+        """A near-cubic TofuD-flavoured torus over ``n_nodes`` nodes:
+        6.8 GB/s per link per direction, six TNIs per node (40.8 GB/s
+        injection), ~0.49-0.54 us one-hop put latency split into a
+        per-hop wire term and a software startup term.  The shape is the
+        most balanced 3-factor decomposition of ``n_nodes`` (ties broken
+        toward the larger trailing dim, where ring neighbours are one
+        hop apart)."""
+        best = None
+        for a in range(1, int(round(n_nodes ** (1 / 3))) + 1):
+            if n_nodes % a:
+                continue
+            rest = n_nodes // a
+            for b in range(a, int(rest ** 0.5) + 1):
+                if rest % b:
+                    continue
+                c = rest // b
+                cand = (a, b, c)
+                score = max(cand) / min(cand)
+                if best is None or score < best[0]:
+                    best = (score, cand)
+        shape = best[1] if best is not None else (1, 1, n_nodes)
+        return cls(name=f"tofu_d_{n_nodes}", mesh_shape=shape,
+                   link_bw=6.8e9, links_per_node=6)
+
+
+@dataclass(frozen=True)
 class HardwareSpec:
     """One hardware parameter file (the gem5-parameter analogue,
     DESIGN.md §4): compute ports, memory hierarchy, interconnect,

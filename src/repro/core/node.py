@@ -450,12 +450,15 @@ def _eff_inv(nc: NodeCompiled, topo: NodeTopology, cores: np.ndarray,
 def _contended_durs_arr(nc: NodeCompiled, inv_r_op: np.ndarray,
                         inv_w_op: np.ndarray, scale: float) -> np.ndarray:
     """Per-op durations under the given per-op inverse bandwidths; work
-    (flops/bytes/payload) scaled by ``scale`` (sharding), latency and
-    startup unscaled (every core still issues its slice of each op)."""
+    (flops/bytes) scaled by ``scale`` (sharding), latency and startup
+    unscaled (every core still issues its slice of each op).  Collective
+    time is NOT scaled: the payload rides the node-level interconnect,
+    which every core's slice serializes on — sharding an op across more
+    cores does not add inter-node links (the cluster engine's degenerate
+    case pins this)."""
     t_mem = ((nc.rd * inv_r_op).sum(axis=1)
              + (nc.wr * inv_w_op).sum(axis=1)) * scale + nc.lat
-    per = np.maximum(np.maximum(nc.t_comp * scale, t_mem),
-                     nc.t_ici * scale)
+    per = np.maximum(np.maximum(nc.t_comp * scale, t_mem), nc.t_ici)
     durs = (per + nc.startup) * nc.count
     # uncosted ops must stay zero-duration free ops
     durs[~nc.costed_mask] = 0.0
@@ -1417,5 +1420,5 @@ def shard_costed(prog: Program, hw: HardwareSpec, n_cores: int,
         out.append(dataclasses.replace(
             ot, t_compute=ot.t_compute * scale,
             t_mem=float(t_mem[i]) if ot.traffic is not None else 0.0,
-            t_ici=ot.t_ici * scale))
+            t_ici=ot.t_ici))
     return out

@@ -19,9 +19,30 @@ axes and never name mesh sizes.
 from __future__ import annotations
 
 import math
+import warnings
 
 import jax
 from jax.sharding import Mesh
+
+
+def _take_devices(devices, n: int, shape, hint: str = ""):
+    """Validate + slice the device list for an ``n``-device mesh.
+
+    Under-provision is fatal (a mesh cannot be built).  Over-provision is
+    legal but loud: the silent ``devices[:n]`` slice used to strand the
+    surplus devices without a trace — a 512-device dry-run pointed at a
+    (16, 16) mesh quietly computed on half the machine.
+    """
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {tuple(shape)}, "
+            f"have {len(devices)}{hint}")
+    if len(devices) > n:
+        warnings.warn(
+            f"mesh {tuple(shape)} uses {n} of {len(devices)} devices; "
+            f"the remaining {len(devices) - n} are idle",
+            RuntimeWarning, stacklevel=3)
+    return devices[:n]
 
 
 def make_production_mesh(*, multi_pod: bool = False,
@@ -31,22 +52,19 @@ def make_production_mesh(*, multi_pod: bool = False,
     n = math.prod(shape)
     if devices is None:
         devices = jax.devices()
-    if len(devices) < n:
-        raise RuntimeError(
-            f"need {n} devices for mesh {shape}, have {len(devices)}; "
-            "the dry-run must set XLA_FLAGS="
-            "--xla_force_host_platform_device_count=512 before importing jax")
-    return jax.make_mesh(shape, axes, devices=devices[:n])
+    devices = _take_devices(
+        devices, n, shape,
+        hint="; the dry-run must set XLA_FLAGS="
+             "--xla_force_host_platform_device_count=512 "
+             "before importing jax")
+    return jax.make_mesh(shape, axes, devices=devices)
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Tiny mesh over whatever devices exist (CPU smoke tests / examples)."""
-    n = data * model
-    devices = jax.devices()
-    if len(devices) < n:
-        raise RuntimeError(f"need {n} devices, have {len(devices)}")
-    return jax.make_mesh((data, model), ("data", "model"),
-                         devices=devices[:n])
+    shape = (data, model)
+    devices = _take_devices(jax.devices(), data * model, shape)
+    return jax.make_mesh(shape, ("data", "model"), devices=devices)
 
 
 def mesh_axis_sizes(mesh: Mesh) -> dict:

@@ -4,6 +4,12 @@ The analytic ring-model here is the napkin-math side of the engine's
 collective port: given a mesh and a payload, predict the per-device bytes
 and time a collective should cost.  §Perf hypotheses quote these numbers;
 the dry-run's parsed HLO then confirms or refutes them.
+
+The byte math itself lives in ``core.cost`` (``collective_factor`` /
+``collective_links``) — this module is a thin mesh-aware veneer over the
+ONE canonical collective model, so its numbers can never drift from what
+the engines charge (the cross-implementation parity test in
+``tests/test_cluster.py`` pins the delegation).
 """
 from __future__ import annotations
 
@@ -11,6 +17,10 @@ from dataclasses import dataclass
 from typing import Dict
 
 from jax.sharding import Mesh
+
+from ..core.cost import collective_factor, collective_links
+
+_MISSING = object()
 
 
 @dataclass(frozen=True)
@@ -20,40 +30,62 @@ class CollectiveCost:
     payload_bytes: float         # per-device operand bytes
     link_bw: float               # bytes/s per direction
     links: int = 2               # bidirectional ring
+    startup_us: float = 0.0      # per-collective latency (cost_op convention)
 
     @property
     def wire_bytes(self) -> float:
-        g = self.group_size
-        if g <= 1:
-            return 0.0
-        if self.kind == "all-reduce":
-            return 2.0 * (g - 1) / g * self.payload_bytes
-        if self.kind == "all-gather":
-            return (g - 1) * self.payload_bytes      # payload = shard bytes
-        if self.kind == "reduce-scatter":
-            return (g - 1) / g * self.payload_bytes  # payload = full buffer
-        if self.kind == "all-to-all":
-            return (g - 1) / g * self.payload_bytes
-        if self.kind == "collective-permute":
-            return self.payload_bytes
-        return self.payload_bytes
+        """Per-device bytes on the wire: ``collective_factor`` applied to
+        the payload (all-reduce 2(g-1)/g, all-gather g-1 over shard
+        bytes, reduce-scatter/all-to-all (g-1)/g, permute 1x; g<=1 moves
+        nothing)."""
+        return collective_factor(self.kind, self.group_size) \
+            * self.payload_bytes
 
     @property
     def t_seconds(self) -> float:
-        return self.wire_bytes / (self.links * self.link_bw)
+        """Wire time under the effective link bandwidth + startup.
+
+        Matches ``core.cost.cost_op``'s collective branch: a permute is
+        one unidirectional send (no 2-link ring credit —
+        ``collective_links``), zero moved bytes charge startup only, and
+        a real payload over a zero-bandwidth link is cleanly infeasible
+        (``inf``)."""
+        moved = self.wire_bytes
+        bw = collective_links(self.kind, self.links) * self.link_bw
+        if moved > 0.0:
+            return (moved / bw if bw > 0.0 else float("inf")) \
+                + self.startup_us * 1e-6
+        return self.startup_us * 1e-6
 
 
-def axis_size(mesh: Mesh, name: str) -> int:
-    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+def axis_size(mesh: Mesh, name: str, default=_MISSING) -> int:
+    """Size of mesh axis ``name``; raises ``KeyError`` for unknown axes.
+
+    The old ``.get(name, 1)`` fallback silently priced typo'd axes as
+    group size 1 — i.e. zero collective cost.  Pass ``default=`` to opt
+    back into a fallback where absence is genuinely meaningful (e.g. a
+    'pod' axis that single-pod meshes simply don't have).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if name in sizes:
+        return sizes[name]
+    if default is not _MISSING:
+        return default
+    raise KeyError(f"mesh has no axis {name!r}; known axes: "
+                   f"{tuple(mesh.axis_names)}")
 
 
 def grad_sync_bytes(param_bytes: float, mesh: Mesh,
-                    compressed: bool = False) -> Dict[str, float]:
-    """Cross-pod gradient sync cost: bf16 all-reduce vs int8-EF scheme.
+                    compressed: bool = False,
+                    axis: str = "pod") -> Dict[str, float]:
+    """Cross-``axis`` gradient sync cost: bf16 all-reduce vs int8-EF scheme.
 
     Returns per-device wire bytes for both schemes (the §Perf comparison).
+    ``axis`` names the data-parallel mesh axis the sync rides (the old
+    hardcoded ``"pod"`` is now just the default) and must exist on the
+    mesh — a typo raises instead of silently reporting zero bytes.
     """
-    g = axis_size(mesh, "pod")
+    g = axis_size(mesh, axis)
     if g <= 1:
         return {"all_reduce": 0.0, "compressed": 0.0}
     ar = 2.0 * (g - 1) / g * param_bytes                     # bf16 AR

@@ -1,0 +1,424 @@
+"""Cluster engine + unified collective model: differentials and guards.
+
+Pins the PR-9 contracts (DESIGN.md §20):
+
+* ONE collective byte-math implementation — ``parallel.collectives``
+  delegates to ``core.cost.collective_factor``/``collective_links``, and
+  the old wire-bytes table is replicated INLINE here to prove the
+  unification preserved every number bit-for-bit;
+* ``CollectiveCost.t_seconds`` matches ``cost_op``'s collective branch
+  (permute single-link, zero-payload and zero-bandwidth conventions);
+* ``axis_size`` raises on unknown axes (the silent group-size-1 bug),
+  ``grad_sync_bytes`` takes the axis as a parameter;
+* ``launch.mesh`` under/over-provision guards;
+* the 2-node degenerate cluster is bit-identical to a node-engine run of
+  the same program plus the canonical link cost of its one collective —
+  in BOTH the 1-core/real-topology and 48-core/degenerate-topology
+  shapes (the latter pins the collective-time-is-not-sharded fix in
+  ``core.node``).
+"""
+import dataclasses
+import json
+import math
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import (ClusterWorkload, CollectiveSite,
+                                ParallelPlan, ShardDecision, _coll,
+                                _inject, axis_hops, cluster_sweep,
+                                collective_time, make_cluster_program,
+                                node_coords, plan_shapes,
+                                schedule_cluster, torus_distance)
+from repro.core.cost import (collective_factor, collective_links,
+                             collective_steps, cost_op)
+from repro.core.hlo import OpStat, Program
+from repro.core.hwspec import A64FX_CORE, ClusterTopology, NodeTopology
+from repro.core.node import compile_node, schedule_node
+
+KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+GROUPS = (1, 2, 4, 48)
+PAYLOAD = 3.7e6
+
+
+def _old_wire_bytes(kind: str, g: int, payload: float) -> float:
+    """The pre-unification ``CollectiveCost.wire_bytes`` table, verbatim
+    (PR-9 deleted it from ``parallel.collectives``; this inline copy is
+    the proof the canonical model preserved its numbers)."""
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g * payload
+    if kind == "all-gather":
+        return (g - 1) * payload
+    if kind == "reduce-scatter":
+        return (g - 1) / g * payload
+    if kind == "all-to-all":
+        return (g - 1) / g * payload
+    if kind == "collective-permute":
+        return payload
+    return payload
+
+
+class _Devices:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+class _Mesh:
+    """Duck-typed mesh: ``axis_size``/``grad_sync_bytes`` only read
+    ``axis_names`` + ``devices.shape``."""
+
+    def __init__(self, names, shape):
+        self.axis_names = names
+        self.devices = _Devices(shape)
+
+
+# ------------------------------------------------ one collective model
+class TestCollectiveParity:
+    def test_wire_bytes_bit_identical_to_old_table(self):
+        from repro.parallel.collectives import CollectiveCost
+        for kind in KINDS + ("weird-op",):
+            for g in GROUPS:
+                cc = CollectiveCost(kind, g, PAYLOAD, link_bw=6.8e9)
+                old = _old_wire_bytes(kind, g, PAYLOAD)
+                assert cc.wire_bytes == old, (kind, g)
+                assert cc.wire_bytes == \
+                    collective_factor(kind, g) * PAYLOAD
+
+    def test_t_seconds_matches_cost_op(self):
+        """The veneer and the engine charge the same seconds — including
+        the permute fix (1 link, not the 2-link ring credit) and the
+        startup term, for every kind x group."""
+        from repro.parallel.collectives import CollectiveCost
+        hw = A64FX_CORE
+        for kind in KINDS:
+            for g in GROUPS:
+                for payload in (PAYLOAD, 0.0):
+                    o = OpStat(name="c", opcode=kind,
+                               opclass="collective", dtype="f32",
+                               comm_bytes=payload, group_size=g)
+                    ot = cost_op(o, hw, ici_bw=2 * hw.ici_bw_per_link)
+                    cc = CollectiveCost(kind, g, payload,
+                                        link_bw=hw.ici_bw_per_link,
+                                        links=2,
+                                        startup_us=hw.collective_startup_us)
+                    assert cc.t_seconds == ot.t_ici, (kind, g, payload)
+
+    def test_permute_gets_one_link(self):
+        from repro.parallel.collectives import CollectiveCost
+        ar = CollectiveCost("all-reduce", 2, PAYLOAD, link_bw=1e9)
+        pm = CollectiveCost("collective-permute", 2, PAYLOAD, link_bw=1e9)
+        assert ar.wire_bytes == pm.wire_bytes    # 2(g-1)/g == 1 at g=2
+        assert pm.t_seconds == 2.0 * ar.t_seconds
+        assert collective_links("collective-permute", 2) == 1
+        for kind in KINDS[:-1]:
+            assert collective_links(kind, 2) == 2
+
+    def test_zero_shortcircuits(self):
+        from repro.parallel.collectives import CollectiveCost
+        # g=1 and zero payload: startup only, even at zero bandwidth
+        for kind in KINDS:
+            assert CollectiveCost(kind, 1, PAYLOAD, 0.0,
+                                  startup_us=7.0).t_seconds == 7.0e-6
+            assert CollectiveCost(kind, 8, 0.0, 0.0,
+                                  startup_us=7.0).t_seconds == 7.0e-6
+        # a real payload over a dead link is infeasible, not a crash
+        t = CollectiveCost("all-reduce", 8, PAYLOAD, 0.0).t_seconds
+        assert math.isinf(t)
+
+    def test_collective_steps(self):
+        assert collective_steps("all-reduce", 8) == 14
+        assert collective_steps("all-gather", 8) == 7
+        assert collective_steps("reduce-scatter", 8) == 7
+        assert collective_steps("collective-permute", 8) == 1
+        for kind in KINDS:
+            assert collective_steps(kind, 1) == 0
+
+
+# --------------------------------------------- mesh veneer de-bugged
+class TestAxisSizeGradSync:
+    def test_axis_size_known(self):
+        from repro.parallel.collectives import axis_size
+        m = _Mesh(("data", "model"), (4, 16))
+        assert axis_size(m, "data") == 4
+        assert axis_size(m, "model") == 16
+
+    def test_axis_size_unknown_raises(self):
+        """The old ``.get(name, 1)`` priced typo'd axes as free."""
+        from repro.parallel.collectives import axis_size
+        m = _Mesh(("data", "model"), (4, 16))
+        with pytest.raises(KeyError, match="no axis 'pod'.*data.*model"):
+            axis_size(m, "pod")
+
+    def test_axis_size_default_opt_in(self):
+        from repro.parallel.collectives import axis_size
+        m = _Mesh(("data", "model"), (4, 16))
+        assert axis_size(m, "pod", default=1) == 1
+        assert axis_size(m, "model", default=1) == 16
+
+    def test_grad_sync_axis_param(self):
+        from repro.parallel.collectives import grad_sync_bytes
+        pb = 1e9
+        multi = _Mesh(("pod", "data", "model"), (2, 16, 16))
+        single = _Mesh(("data", "model"), (16, 16))
+        d = grad_sync_bytes(pb, multi)                   # default "pod"
+        assert d["all_reduce"] == 2.0 * (2 - 1) / 2 * pb
+        assert 0.0 < d["compressed"] < d["all_reduce"]
+        # the same math rides any named axis now
+        g = 16
+        d2 = grad_sync_bytes(pb, single, axis="data")
+        assert d2["all_reduce"] == 2.0 * (g - 1) / g * pb
+        # a missing axis raises instead of silently reporting zero
+        with pytest.raises(KeyError):
+            grad_sync_bytes(pb, single)
+
+
+class TestMeshGuards:
+    def test_under_provision_raises(self):
+        from repro.launch.mesh import _take_devices
+        with pytest.raises(RuntimeError,
+                           match=r"need 6 devices for mesh \(2, 3\), "
+                                 r"have 4"):
+            _take_devices(list(range(4)), 6, (2, 3))
+
+    def test_over_provision_warns_and_slices(self):
+        from repro.launch.mesh import _take_devices
+        with pytest.warns(RuntimeWarning, match=r"uses 4 of 7 devices.*"
+                                                r"3 are idle"):
+            got = _take_devices(list(range(7)), 4, (2, 2))
+        assert got == [0, 1, 2, 3]
+
+    def test_exact_provision_silent(self):
+        from repro.launch.mesh import _take_devices
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            assert _take_devices(list(range(4)), 4, (2, 2)) == \
+                [0, 1, 2, 3]
+
+    def test_production_mesh_error_message(self):
+        """The dry-run's one actionable failure names the fix."""
+        from repro.launch.mesh import make_production_mesh
+        with pytest.raises(RuntimeError, match="XLA_FLAGS"):
+            make_production_mesh(devices=[object()] * 3)
+
+    def test_host_mesh_guarded(self):
+        from repro.launch.mesh import make_host_mesh
+        with pytest.raises(RuntimeError, match="need 64 devices"):
+            make_host_mesh(8, 8)
+
+
+# ------------------------------------------------- link tier geometry
+class TestTopologyGeometry:
+    def test_tofu_d_near_cubic(self):
+        assert ClusterTopology.tofu_d(2).mesh_shape == (1, 1, 2)
+        assert ClusterTopology.tofu_d(64).mesh_shape == (4, 4, 4)
+        assert ClusterTopology.tofu_d(1024).mesh_shape == (8, 8, 16)
+        for n in (2, 4, 8, 16, 32, 64, 128, 256, 512, 1024):
+            c = ClusterTopology.tofu_d(n)
+            assert c.n_nodes == n
+            assert math.prod(c.mesh_shape) == n
+
+    def test_torus_distance_wraps(self):
+        c = ClusterTopology.tofu_d(64)              # (4, 4, 4)
+        ids = np.arange(64).reshape(4, 4, 4)
+        # last-dim neighbours are 1 hop, incl. the wraparound pair
+        assert torus_distance(c, ids[0, 0, 0], ids[0, 0, 3]) == 1
+        assert torus_distance(c, ids[0, 0, 0], ids[0, 0, 2]) == 2
+        # the far corner: 2 hops per dimension through the torus
+        assert torus_distance(c, ids[0, 0, 0], ids[2, 2, 2]) == 6
+        assert node_coords(c, 63).tolist() == [3, 3, 3]
+
+    def test_axis_hops_placement(self):
+        c = ClusterTopology.tofu_d(64)
+        h = axis_hops(c, ParallelPlan(dp=4, tp=4, pp=4))
+        # tp is the fastest logical axis -> nearest-neighbour ring
+        assert h["tp"] == 1.0
+        assert h["dp"] >= 1.0 and h["pp"] >= 1.0
+        # unused axes cost nothing
+        h1 = axis_hops(c, ParallelPlan(dp=64, tp=1, pp=1))
+        assert h1["tp"] == 0.0 and h1["pp"] == 0.0
+        with pytest.raises(ValueError, match="places 8 nodes"):
+            axis_hops(c, ParallelPlan(dp=8, tp=1, pp=1))
+
+    def test_collective_time_conventions(self):
+        c = ClusterTopology.tofu_d(8)
+        t1 = collective_time("all-reduce", 8, PAYLOAD, c)
+        # more bytes, more hops, more concurrent streams: all slower
+        assert collective_time("all-reduce", 8, 2 * PAYLOAD, c) > t1
+        assert collective_time("all-reduce", 8, PAYLOAD, c, hops=2.0) > t1
+        # contention bites only past links_per_node / ring links = 3
+        # concurrent streams (below that the 2-link draw is the limiter)
+        assert collective_time("all-reduce", 8, PAYLOAD, c,
+                               n_active=3.0) == t1
+        assert collective_time("all-reduce", 8, PAYLOAD, c,
+                               n_active=6.0) > t1
+        # g<=1 and zero payload: latency only
+        lat = c.collective_startup_us * 1e-6
+        assert collective_time("all-reduce", 1, PAYLOAD, c) == lat
+        assert collective_time("all-reduce", 8, 0.0, c) > lat  # steps
+        dead = dataclasses.replace(c, link_bw=0.0)
+        assert math.isinf(collective_time("all-reduce", 8, PAYLOAD, dead))
+
+
+# --------------------------------------------------- program building
+def _base_program(n: int = 40) -> Program:
+    from benchmarks.sched_throughput import synthetic_program
+    return synthetic_program(n, seed=3)
+
+
+def _workload(prog: Program) -> ClusterWorkload:
+    return ClusterWorkload(name="t", prog=prog, repeats=8, layers=2,
+                           d_model=256, seq_len=64, batch=2,
+                           param_bytes=1e8, frac_attn=0.4, moe_top_k=2)
+
+
+class TestMakeClusterProgram:
+    def test_structure_and_deps(self):
+        w = _workload(_base_program())
+        prog, sites = make_cluster_program(w, tp=4, pp=2)
+        # tp: 2 comps x 2 layers x fwd+bwd; dp: 2 buckets; pp: 2 permutes
+        assert len(sites) == 8 + 2 + 2
+        assert len(prog.ops) == 40 + len(sites)
+        for s in sites:
+            o = prog.ops[s.index]
+            assert o.opclass == "collective" and o.opcode == s.kind
+        for i, o in enumerate(prog.ops):
+            assert all(0 <= d < i for d in o.deps)   # scheduler contract
+            assert len(o.deps) == len(o.dep_bytes)
+
+    def test_work_scaling(self):
+        w = _workload(_base_program())
+        base_flops = w.prog.flops
+        prog, sites = make_cluster_program(
+            w, tp=4, pp=2, decision=ShardDecision(attn=True, mlp=True))
+        coll = {s.index for s in sites}
+        flops = sum(o.flops * o.count
+                    for i, o in enumerate(prog.ops) if i not in coll)
+        s_tp = 0.4 / 4 + 0.6 / 4            # everything sharded: 1/tp
+        assert flops == pytest.approx(base_flops * s_tp * 8 / 2)
+
+    def test_replicated_components_keep_work(self):
+        w = _workload(_base_program())
+        prog, sites = make_cluster_program(
+            w, tp=4, pp=1,
+            decision=ShardDecision(attn=True, mlp=False, experts=False))
+        coll = {s.index for s in sites}
+        flops = sum(o.flops * o.count
+                    for i, o in enumerate(prog.ops) if i not in coll)
+        s_tp = 0.4 / 4 + 0.6                # mlp replicated
+        assert flops == pytest.approx(w.prog.flops * s_tp * 8)
+
+    def test_moe_emits_all_to_all(self):
+        w = _workload(_base_program())
+        prog, sites = make_cluster_program(
+            w, tp=4, pp=1,
+            decision=ShardDecision(attn=True, mlp=False, experts=True))
+        kinds = {s.kind for s in sites if s.axis == "tp"}
+        assert kinds == {"all-reduce", "all-to-all"}
+        a2a = [s for s in sites if s.kind == "all-to-all"]
+        assert a2a[0].payload_bytes == w.act_bytes * w.moe_top_k
+
+    def test_pp_exceeding_depth_raises(self):
+        w = _workload(_base_program())
+        with pytest.raises(ValueError, match="pp=16 exceeds"):
+            make_cluster_program(w, tp=1, pp=16)
+
+    def test_plan_shapes(self):
+        shapes = plan_shapes(max_tp=4, max_pp=2)
+        assert (1, 1) in shapes and (4, 2) in shapes
+        assert all(tp in (1, 2, 4) and pp in (1, 2) for tp, pp in shapes)
+
+
+# ------------------------------------- 2-node degenerate bit-identity
+class TestDegenerateTwoNode:
+    """A 2-node pure-DP cluster whose one collective hangs off the tail
+    must cost EXACTLY a node-engine run of the base program plus the
+    canonical link time of that collective — no new math on the
+    degenerate path."""
+
+    @pytest.mark.parametrize("n_cores,topo", [
+        (1, None),                            # real A64FX node topology
+        (48, NodeTopology.degenerate(48)),    # uncapped, scale=1/48
+    ], ids=["1core_real_topo", "48core_degenerate_topo"])
+    def test_bit_identical(self, n_cores, topo):
+        base = _base_program(48)
+        payload = 1.5e6
+        ops, sites = _inject(
+            list(base.ops),
+            [(1.0, _coll("tail_ar", "all-reduce", payload, 1.0),
+              False, "dp")])
+        prog = Program(ops=ops, entry="deg", n_partitions=1)
+        assert sites[0].index == len(base.ops)
+        cl = ClusterTopology.tofu_d(2)
+        plan = ParallelPlan(dp=2, tp=1, pp=1)
+
+        rows = schedule_cluster(prog, sites, [(plan, cl)],
+                                hw=A64FX_CORE, n_cores=n_cores,
+                                topology=topo)
+
+        nr = schedule_node(compile_node(base, A64FX_CORE), A64FX_CORE,
+                           n_cores, topology=topo, partition="shard")
+        hops = axis_hops(cl, plan)["dp"]
+        # canonical pricing + the engine's per-op startup, NOT divided by
+        # core count (collectives ride node-level links; the §14 fix)
+        dur = collective_time("all-reduce", 2, payload, cl,
+                              hops=hops, n_active=1.0) \
+            + A64FX_CORE.op_startup_ns * 1e-9
+        expected = max(nr.t_est, float(nr.finishes[-1]) + dur)
+        assert rows[0]["t_sched"] == expected
+        # the compute-only floor is the node-engine makespan, bit-for-bit
+        assert rows[0]["t_floor"] == nr.t_est
+        assert rows[0]["t_ici"][0] == dur - A64FX_CORE.op_startup_ns * 1e-9
+
+
+# -------------------------------------------------- sweep + report
+class TestClusterSweep:
+    def test_sweep_sane(self):
+        w = _workload(_base_program())
+        res = cluster_sweep(w, (2, 8), n_cores=12, max_tp=4, max_pp=2)
+        assert res
+        seen = set()
+        for r in res:
+            key = (r.n_nodes, r.plan.label)
+            assert key not in seen
+            seen.add(key)
+            assert r.plan.n_nodes == r.n_nodes
+            assert 0.0 < r.t_floor_s <= r.t_step_s < math.inf
+            assert 0.0 < r.parallel_efficiency <= 1.0 + 1e-9
+            assert r.t_step_s >= r.t_sched_s    # bubble only adds
+        # a pure-DP plan exists at every node count
+        assert any(r.plan.tp == 1 and r.plan.pp == 1 and r.n_nodes == 2
+                   for r in res)
+
+    def test_report_roundtrip(self):
+        from repro.core.zoo import ClusterReport
+        w = _workload(_base_program())
+        rep = ClusterReport(hw="a64fx_core", topology="deg",
+                            cluster="tofu_d", n_cores=12,
+                            compute_dtype="f32", node_counts=(2, 8))
+        rep.results[w.name] = cluster_sweep(w, (2, 8), n_cores=12,
+                                            max_tp=4, max_pp=2)
+        d = rep.to_dict()
+        json.dumps(d)                          # BENCH-serializable
+        assert d["schema"] == 1
+        assert d["rank"]["2"] == [w.name]
+        assert "min" in d["kendall_tau"][w.name]
+        best = rep.best(w.name, 8)
+        assert d["models"][w.name]["best_plan"]["8"] == best.plan.label
+        sc = d["models"][w.name]["scaling"]["8"]
+        assert sc["t_step_us"] == pytest.approx(best.t_step_s * 1e6)
+
+    def test_ici_contention_engages(self):
+        """Multi-axis plans with heavy payloads must drive the link-tier
+        fixpoint above one concurrent stream."""
+        prog = _base_program(24)
+        w = ClusterWorkload(name="hot", prog=prog, repeats=8, layers=4,
+                            d_model=4096, seq_len=512, batch=8,
+                            param_bytes=5e10, frac_attn=0.4)
+        res = cluster_sweep(w, (16,), n_cores=1, max_tp=4, max_pp=2)
+        multi = [r for r in res if r.plan.tp > 1]
+        assert any(r.ici_n_active > 1.0 for r in multi)
+        assert all(r.iterations >= 1 for r in res)
