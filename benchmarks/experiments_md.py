@@ -6,7 +6,8 @@ Sections §Dry-run and §Roofline are generated from experiments/dryrun/;
 §Kernel-suite and §Triad from experiments/bench/; §Model-zoo from the
 committed BENCH_model_zoo.json; §Sampled-zoo from the committed
 BENCH_sampling.json; §Design-space from BENCH_dse.json;
-§Cluster-scaling from BENCH_cluster.json; §Perf is included verbatim from
+§Cluster-scaling from BENCH_cluster.json; §Serving from
+BENCH_serving.json; §Perf is included verbatim from
 experiments/perf_log.md (the hand-written hypothesis->measure log), so
 regeneration never clobbers analysis text.
 
@@ -28,6 +29,7 @@ ZOO_JSON = ROOT / "BENCH_model_zoo.json"
 SAMPLING_JSON = ROOT / "BENCH_sampling.json"
 DSE_JSON = ROOT / "BENCH_dse.json"
 CLUSTER_JSON = ROOT / "BENCH_cluster.json"
+SERVING_JSON = ROOT / "BENCH_serving.json"
 OUT = ROOT / "EXPERIMENTS.md"
 
 SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
@@ -292,6 +294,42 @@ def cluster_section() -> str:
     return "\n".join(out)
 
 
+def serving_section() -> str:
+    if not SERVING_JSON.exists():
+        return ("_run `PYTHONPATH=src python -m benchmarks."
+                "serving_sweep` first_")
+    d = json.loads(SERVING_JSON.read_text())
+    a = d["arrival"]
+    out = []
+    for name in sorted(d["models"]):
+        m = d["models"][name]
+        tr = m["traffic"]
+        out.append(f"**{name}** — λ={m['rate_per_s']:,.1f} req/s "
+                   f"({a['load_factor']}× the batch-1 rate), prompts "
+                   f"~{tr['prompt_mean']:,.0f} tok, outputs "
+                   f"~{tr['out_mean']:,.0f} tok, KV "
+                   f"{m['bytes_per_token'] / 1e3:,.1f} kB/token")
+        out.append("")
+        out.append("| policy | p50 TTFT ms | p99 TTFT ms | p99 TPOT ms "
+                   "| tokens/s | mean batch | evict | rejected |")
+        out.append("|---|---|---|---|---|---|---|---|")
+        for p in d["policies"]:
+            s = m["policies"][p["label"]]
+            star = "**" if p["label"] in m["pareto"] else ""
+            out.append(
+                f"| {star}{p['label']}{star} | {s['p50_ttft_ms']:,.1f} "
+                f"| {s['p99_ttft_ms']:,.1f} | {s['p99_tpot_ms']:,.2f} "
+                f"| {s['tokens_per_s']:,.1f} "
+                f"| {s['mean_decode_batch']:.1f} | {s['n_evictions']} "
+                f"| {s['rejected']} |")
+        out.append("")
+    out.append("**Bold** = on the (p99 TTFT, tokens/s) Pareto front for "
+               "that model.  Every run's Little's-law bookkeeping gap is "
+               "< 1e-6 (the in-loop ∫N(t)dt vs summed sojourns — "
+               "`tests/test_serving.py` pins it at 1e-9).")
+    return "\n".join(out)
+
+
 def triad_section() -> str:
     p = BENCH / "triad.json"
     if not p.exists():
@@ -462,6 +500,22 @@ axis as pp saturates the trace depth, then dp weak-scales tokens/s.
 
 {cluster}
 
+## §Serving — trace-driven continuous batching with SLO percentiles
+
+`PYTHONPATH=src python -m benchmarks.serving_sweep` (DESIGN.md §21).
+Open-loop Poisson arrivals (per-model lognormal prompt/output mixes)
+against an iteration-level continuous-batching scheduler on one A64FX
+node: prefill and per-batch decode step costs come from the §17 node
+engine (disk-cached per (arch, phase, batch) cell, scaled to the full
+config by the layer ratio), and each admitted request holds its REAL
+KV working set (`kv_token_bytes` of the actual cache pytree) against
+node HBM, streamed at the residency level's bandwidth every decode
+step.  Policies sweep max batch, FCFS vs shortest-prompt admission,
+chunked prefill, and eviction (reject = oracle reservation; evict =
+optimistic admission + preempt-and-re-prefill).
+
+{serving}
+
 ## §Triad — paper Figs. 4/5
 
 `PYTHONPATH=src python -m benchmarks.triad`.  The paper sweeps 1–12 A64FX
@@ -499,6 +553,7 @@ def main() -> int:
         sampling=sampling_section(),
         dse=dse_section(),
         cluster=cluster_section(),
+        serving=serving_section(),
         triad=triad_section(),
         perf=perf,
     ))

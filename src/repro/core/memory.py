@@ -110,6 +110,25 @@ def residency_level(levels: Sequence[MemLevel], nbytes: float) -> MemLevel:
     return levels[-1]
 
 
+def stream_time(levels: Sequence[MemLevel], nbytes: float,
+                write: bool = False) -> float:
+    """Time to stream a ``nbytes`` working set through the hierarchy at
+    its residency level's bandwidth: the level is picked by
+    :func:`residency_level` (innermost fit, outermost backstop), so a
+    working set that spills a level pays the next level's bandwidth.
+
+    This is the serving simulator's KV-cache cost hook (``core.serving``,
+    DESIGN.md §21): a decode batch whose cache working set no longer fits
+    L2 streams from HBM2, and one that outgrows HBM2 still streams at the
+    outermost level's bandwidth (there is nowhere further to miss to).
+    """
+    if nbytes <= 0:
+        return 0.0
+    lv = residency_level(levels, nbytes)
+    bw = lv.write_bw if write else lv.read_bw
+    return nbytes / bw
+
+
 def route_standalone(op: OpStat, levels: Sequence[MemLevel],
                      compute_dtype: Optional[str] = None,
                      warm_caches: bool = False) -> MemTraffic:

@@ -139,19 +139,27 @@ class ServeEngine:
     def _pad_cache(self, cache, cur_len: int):
         target = self.max_seq
 
-        def pad_leaf(x):
-            # KV leaves have the sequence on axis 2 of (L, B, S, KV, HD) or
-            # axis 1 of (B, S, ...) conv caches; SSM states have fixed shape.
-            for ax in range(x.ndim):
-                if x.shape[ax] == cur_len and cur_len != target:
-                    widths = [(0, 0)] * x.ndim
-                    widths[ax] = (0, target - cur_len)
-                    return jnp.pad(x, widths)
-            return x
+        def pad_leaf(x, p):
+            # The sequence axis is the one the spec declares as 'kvseq' —
+            # scanning for an axis sized cur_len instead would pad the
+            # wrong axis whenever another dimension (layers, batch, kv
+            # heads) happens to equal the prompt length.  Leaves whose
+            # kvseq axis is fixed-length in the spec (audio cross-attn at
+            # enc_seq) and leaves with no kvseq axis (SSM conv/state) pass
+            # through untouched.
+            if "kvseq" not in p.axes:
+                return x
+            ax = p.axes.index("kvseq")
+            if p.shape[ax] != target or x.shape[ax] == target:
+                return x
+            widths = [(0, 0)] * x.ndim
+            widths[ax] = (0, target - x.shape[ax])
+            return jnp.pad(x, widths)
 
         if self.model.cfg.family in ("ssm",):
             return cache           # O(1) state, nothing seq-shaped
-        return jax.tree.map(pad_leaf, cache)
+        specs = self.model.cache_specs(1, target)
+        return jax.tree.map(pad_leaf, cache, specs)
 
     # ---------------------------------------------------------------- serve
     def generate(self, prompts: List[List[int]], max_new_tokens: int = 16,

@@ -33,3 +33,26 @@ def cache_bytes(model: LM, batch: int, max_seq: int,
                 dtype=jnp.bfloat16) -> int:
     specs = model.cache_specs(batch, max_seq)
     return pr.bytes_of(specs, dtype)
+
+
+def kv_token_bytes(model: LM, dtype=jnp.bfloat16) -> tuple[float, float]:
+    """Affine decomposition of :func:`cache_bytes` over the sequence axis:
+    ``(bytes_per_token, bytes_per_request)`` such that for one request
+
+        cache_bytes(model, 1, seq) == bytes_per_request
+                                      + bytes_per_token * seq
+
+    exactly, for every ``seq >= 1``.  ``cache_bytes`` is affine in
+    ``max_seq`` by construction (every cache leaf's shape is either
+    proportional to the sequence axis — dense/GQA/hybrid KV, int8 scale
+    leaves — or independent of it — SSM conv/state, audio cross-attention
+    at ``n_frames``), so two evaluations recover both coefficients.  SSM
+    models get ``bytes_per_token == 0`` (O(1) state); this is the sizing
+    the serving simulator's paged-KV accounting (``core.serving``,
+    DESIGN.md §21) charges per admitted request.
+    """
+    span = 128
+    b_lo = cache_bytes(model, 1, 1, dtype)
+    b_hi = cache_bytes(model, 1, 1 + span, dtype)
+    per_token = (b_hi - b_lo) / span
+    return float(per_token), float(b_lo - per_token)
